@@ -1,0 +1,140 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Per (arch × shape × mesh) cell, from the trip-count-aware HLO analysis:
+
+  T_comp = FLOPs_per_chip / 197e12        (v5e bf16 peak)
+  T_mem  = traffic_bytes_per_chip / 819e9 (HBM)
+  T_coll = collective_bytes_per_chip / 50e9 (ICI per-chip link bw)
+
+Dominant term = the bottleneck.  MODEL_FLOPS uses the 6·N·D convention
+(2·N·D for forward-only kinds, N = active params); the ratio
+MODEL_FLOPS / HLO_FLOPS exposes remat recompute, attention, dispatch
+overheads and head-padding waste.  Roofline fraction = T_model_compute /
+max(T_comp, T_mem, T_coll): the fraction of ideal-compute throughput this
+lowering would achieve if the dominant term were perfectly overlapped with
+the rest.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per chip link
+
+RESULTS = Path("results/dryrun")
+
+
+def model_flops(rec: Dict) -> float:
+    n_active = rec["params_active"]
+    kind = rec["kind"]
+    B = rec["global_batch"]
+    # enc-dec archs process seq/4 decoder tokens on train shapes and
+    # decoder_prefill_len on prefill shapes (configs/specs.py conventions)
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+    from repro.configs.specs import decoder_len
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_enc = cfg.encoder_param_count()
+    n_dec = n_active - n_enc
+    enc_tokens = B * shape.seq_len if cfg.is_encdec else 0
+    if kind == "train":
+        tokens = B * decoder_len(cfg, shape)
+        return 6.0 * (n_dec * tokens + n_enc * enc_tokens)
+    if kind == "prefill":
+        tokens = B * decoder_len(cfg, shape)
+        return 2.0 * (n_dec * tokens + n_enc * enc_tokens)
+    return 2.0 * n_dec * B        # decode: one token per sequence
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    hlo = rec["hlo"]
+    chips = rec["chips"]
+    t_comp = hlo["flops_per_chip"] / PEAK_FLOPS
+    t_mem = hlo["traffic_bytes_per_chip"] / HBM_BW
+    t_coll = hlo["collective_bytes_per_chip"] / ICI_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])
+    mf = model_flops(rec)
+    hlo_total = hlo["flops_per_chip"] * chips
+    t_model = mf / chips / PEAK_FLOPS
+    frac = t_model / max(t_comp, t_mem, t_coll, 1e-12)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_comp_s": t_comp, "t_mem_s": t_mem, "t_coll_s": t_coll,
+        "dominant": dominant[0],
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / max(hlo_total, 1e-9),
+        "roofline_fraction": frac,
+        "mem_gib": rec["memory"]["peak_bytes_per_device"] / 2**30,
+        "per_collective": hlo.get("per_collective_bytes", {}),
+    }
+
+
+def suggestion(row: Dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        top = max(row["per_collective"].items(), key=lambda kv: kv[1],
+                  default=("-", 0))
+        return (f"cut {top[0]} volume (overlap via collective-matmul / "
+                f"compress grads / reshard)")
+    if d == "memory":
+        return "raise arithmetic intensity (fuse, bigger tiles, bf16 temps)"
+    if row["useful_ratio"] < 0.4:
+        return "reduce non-model FLOPs (remat policy, dispatch, head padding)"
+    return "near compute roof — overlap remaining collectives"
+
+
+def load_all(path: Path = RESULTS) -> List[Dict]:
+    rows = []
+    for f in sorted(path.glob("*.json")):
+        rec = json.loads(f.read_text())
+        # patch dec_len for enc-dec train cells
+        if rec.get("status") == "ok":
+            r = analyze_record(rec)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def markdown_table(rows: List[Dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) | dominant "
+           "| useful FLOP ratio | roofline frac | GiB/dev | next move |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_comp_s']:.4f} | "
+            f"{r['t_mem_s']:.4f} | {r['t_coll_s']:.4f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} | "
+            f"{r['mem_gib']:.1f} | {suggestion(r)} |")
+    return "\n".join(out)
+
+
+def run() -> None:
+    from .common import emit
+    if not RESULTS.exists():
+        emit("roofline/missing", 0.0, "run launch/dryrun.py first")
+        return
+    rows = load_all()
+    for r in rows:
+        emit(f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}",
+             max(r["t_comp_s"], r["t_mem_s"], r["t_coll_s"]) * 1e6,
+             f"dominant={r['dominant']} useful={r['useful_ratio']:.2f} "
+             f"frac={r['roofline_fraction']:.2f} mem={r['mem_gib']:.1f}GiB")
+
+
+if __name__ == "__main__":
+    rows = load_all()
+    print(markdown_table(rows, "16x16"))
+    print()
+    print(markdown_table(rows, "2x16x16"))

@@ -1,0 +1,50 @@
+"""Benchmark harness entrypoint — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (all_scan, fannkuch, find_first, moe_dispatch, roofline,
+                   sort_adaptors, sort_compare, task_counts)
+    from .common import header
+
+    modules = {
+        "find_first": find_first,        # paper Fig. 3/4
+        "all_scan": all_scan,            # paper Fig. 5
+        "sort_adaptors": sort_adaptors,  # paper Fig. 6
+        "sort_compare": sort_compare,    # paper Fig. 7
+        "fannkuch": fannkuch,            # paper Fig. 8
+        "task_counts": task_counts,      # §2.1 / §3.6 claims
+        "moe_dispatch": moe_dispatch,    # sort-dispatch application
+        "roofline": roofline,            # §Roofline summary
+    }
+    header()
+    failed = []
+    for name, mod in modules.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.run()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Fig. 6 — the same sort, different task-splitting adaptors.
+
+The paper's point is *composability*: one implementation, six schedules, and
+scheduling visibly changes the execution profile.  We sort 2^20 int32 keys
+with tile-sort + plan-driven merges; the sort phase's division policy is the
+swappable adaptor.  Reported per variant: wall time on this host and the
+plan's task/division counts (the quantity the schedules actually control).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (SeqWork, bound_depth, build_plan, join_context,
+                        thief_splitting, StealContext)
+
+from .common import emit, time_fn
+
+N = 1 << 20
+TILE = 1 << 14
+
+
+def composed_sort(keys: np.ndarray, plan) -> np.ndarray:
+    """Stable merge sort driven by a Kvik plan (numpy leaves/merges)."""
+    def leaf(work):
+        return np.sort(keys[work.start:work.stop], kind="stable")
+
+    def merge(a, b):
+        out = np.empty(len(a) + len(b), a.dtype)
+        ia = ib = io = 0
+        # numpy-vectorized two-way merge via searchsorted
+        pos = np.searchsorted(a, b, side="right")
+        out[pos + np.arange(len(b))] = b
+        mask = np.ones(len(out), bool)
+        mask[pos + np.arange(len(b))] = False
+        out[mask] = a
+        return out
+
+    return plan.map_reduce(leaf, merge)
+
+
+def run() -> None:
+    keys = np.random.RandomState(0).randint(0, 1 << 30, N).astype(np.int32)
+    expect = np.sort(keys)
+
+    variants = {
+        "bound_depth(6)": bound_depth(SeqWork(0, N, min_size=TILE), 6),
+        "thief_splitting(p=16)": thief_splitting(
+            SeqWork(0, N, min_size=TILE), p=16),
+        "join_context(6)": join_context(SeqWork(0, N, min_size=TILE), 6),
+        "join_context(6)+steal": None,  # built below with a stolen context
+    }
+    for name, work in variants.items():
+        if name.endswith("+steal"):
+            ctx = StealContext(stolen=True, worker=1)
+            plan = build_plan(join_context(SeqWork(0, N, min_size=TILE), 6),
+                              ctx=ctx)
+        else:
+            plan = build_plan(work)
+        out = composed_sort(keys, plan)
+        assert np.array_equal(out, expect), name
+        t = time_fn(lambda: composed_sort(keys, plan), iters=3)
+        emit(f"sort_adaptors/{name}", t,
+             f"tasks={plan.num_tasks()} divisions={plan.divisions} "
+             f"depth={plan.depth()}")

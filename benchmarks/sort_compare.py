@@ -1,0 +1,51 @@
+"""Paper Fig. 7 — our composable sort vs library sorts.
+
+Single-core host: we compare against np.sort / jnp.argsort as the
+"state-of-the-art library" stand-ins the paper compared against (TBB pstl,
+gnu parallel).  The honest claim on 1 core is overhead-parity, not speedup;
+the 1.5× speedup claim from the paper is about *parallel scaling*, which the
+virtual-time runtime reproduces (see fannkuch + task_counts benches).
+Also measured: the Pallas merge-sort kernel path (interpret mode) at a
+shape where interpretation cost is tolerable — correctness is the claim.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import SeqWork, bound_depth, build_plan
+from repro.kernels.merge_sort import argsort as kernel_argsort
+
+from .common import emit, time_fn
+from .sort_adaptors import composed_sort
+
+N = 1 << 20
+
+
+def run() -> None:
+    keys = np.random.RandomState(0).randint(0, 1 << 30, N).astype(np.int32)
+
+    t_np = time_fn(lambda: np.sort(keys, kind="stable"), iters=3)
+    emit("sort_compare/np.sort", t_np, f"n={N}")
+
+    jk = jnp.asarray(keys)
+    t_jnp = time_fn(lambda: jnp.sort(jk).block_until_ready(), iters=3)
+    emit("sort_compare/jnp.sort", t_jnp, f"ratio_vs_np={t_jnp/t_np:.2f}")
+
+    plan = build_plan(bound_depth(SeqWork(0, N, min_size=1 << 14), 6))
+    t_ours = time_fn(lambda: composed_sort(keys, plan), iters=3)
+    emit("sort_compare/kvik_composed", t_ours,
+         f"ratio_vs_np={t_ours/t_np:.2f} tasks={plan.num_tasks()}")
+
+    # Pallas kernel (interpret mode → correctness + structure, not speed)
+    small = jnp.asarray(keys[: 1 << 14] & 0x7FF)
+    t_kernel = time_fn(
+        lambda: kernel_argsort(small, tile=1024,
+                               interpret=True).block_until_ready(),
+        warmup=1, iters=1)
+    order = np.asarray(kernel_argsort(small, tile=1024, interpret=True))
+    ok = bool((np.asarray(small)[order] == np.sort(np.asarray(small))).all())
+    emit("sort_compare/pallas_merge_sort_interpret", t_kernel,
+         f"n={1<<14} correct={ok}")

@@ -1,0 +1,34 @@
+"""Paper §2.1/§3.6 quantitative claims — task-creation counts.
+
+* thief_splitting, balanced work, p a power of two → O(p) tasks;
+* adaptive → tasks = successful steals + 1 (measured identity);
+* naive full division → Ω(n) tasks (the baseline both improve on).
+"""
+
+from __future__ import annotations
+
+from repro.core import (AdaptiveSim, CostModel, WorkRange, WorkStealingSim,
+                        bound_depth, build_plan, thief_splitting)
+
+from .common import emit
+
+N = 1 << 18
+
+
+def run() -> None:
+    naive_plan = build_plan(WorkRange(0, N, min_size=N // (1 << 14)))
+    emit("task_counts/naive_full_division", 0.0,
+         f"tasks={naive_plan.num_tasks()}")
+
+    for p in (2, 4, 8, 16, 32):
+        cost = CostModel(per_item=1.0)
+        thief = WorkStealingSim(p, cost, seed=0).run(
+            thief_splitting(WorkRange(0, N), p=p))
+        adapt = AdaptiveSim(p, cost, seed=0).run(WorkRange(0, N))
+        emit(f"task_counts/p{p}/thief", thief.makespan,
+             f"tasks={thief.tasks_created} tasks_per_p="
+             f"{thief.tasks_created/p:.1f}")
+        emit(f"task_counts/p{p}/adaptive", adapt.makespan,
+             f"tasks={adapt.tasks_created} "
+             f"steals+1={adapt.steals_successful + 1} identity="
+             f"{adapt.tasks_created == adapt.steals_successful + 1}")

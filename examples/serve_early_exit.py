@@ -1,0 +1,52 @@
+"""End-to-end serving driver: batched requests, by_blocks chunked prefill,
+find_first early-exit decode.
+
+    PYTHONPATH=src python examples/serve_early_exit.py
+
+Serves a small randomly-initialized model (structure, not quality, is the
+point): requests of mixed lengths are admitted under the ``cap`` adaptor,
+prompts prefill in geometric chunks, decoding stops at EOS with the wasted
+work measured against the paper's bound.
+"""
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.serve.engine import Engine, EngineConfig, Request
+
+cfg = ModelConfig(name="serve-demo", family="dense", num_layers=4,
+                  d_model=256, num_heads=8, num_kv_heads=4, head_dim=32,
+                  d_ff=1024, vocab_size=4096, loss_chunk=1024)
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+print(f"[serve] model: {cfg.param_count()/1e6:.1f}M params")
+
+engine = Engine(model, params, EngineConfig(max_batch=4, eos_id=11,
+                                            max_seq=512))
+rng = np.random.RandomState(0)
+for rid in range(10):
+    plen = int(rng.randint(8, 64))
+    engine.submit(Request(rid=rid,
+                          prompt=rng.randint(3, cfg.vocab_size,
+                                             plen).astype(np.int32),
+                          max_new=48))
+
+finished = []
+round_no = 0
+while True:
+    batch = engine.step()
+    if not batch:
+        break
+    round_no += 1
+    for r in batch:
+        finished.append(r)
+        print(f"[serve] round {round_no} req {r.rid}: "
+              f"{len(r.result)} tokens "
+              f"(decode blocks={r.stats.blocks}, "
+              f"wasted={r.stats.wasted_fraction:.1%})")
+
+assert len(finished) == 10
+print(f"[serve] served {len(finished)} requests in {round_no} rounds — OK")

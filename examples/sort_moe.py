@@ -1,0 +1,49 @@
+"""The paper's stable merge sort, deployed: MoE token dispatch.
+
+    PYTHONPATH=src python examples/sort_moe.py
+
+Routes a batch of tokens through a small MoE layer twice — once with GShard
+einsum dispatch, once with sort-based dispatch where the stable order comes
+from the Pallas merge-sort kernel (interpret mode on CPU) — and shows the
+outputs agree while the sort path processes every token (dropless).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.kernels.merge_sort import argsort as pallas_argsort
+from repro.kernels.ref import stable_argsort_reference
+from repro.models.moe import moe_einsum, moe_init, moe_sort_dispatch, \
+    route_topk
+
+cfg = get_smoke_config("deepseek-v2-lite-16b")
+params = moe_init(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, cfg.d_model)
+                      ).astype(jnp.float32)
+
+# 1. the routing decisions
+probs, experts, aux = route_topk(params["router"], x.reshape(-1, cfg.d_model),
+                                 cfg.top_k)
+flat = experts.reshape(-1)
+print(f"[sort_moe] {flat.shape[0]} (token,expert) assignments over "
+      f"{cfg.num_experts} experts; aux load-balance loss = {float(aux):.3f}")
+
+# 2. the paper's stable sort (Pallas kernel) vs the library oracle
+order_kernel = pallas_argsort(flat, tile=512, interpret=True)
+order_ref = stable_argsort_reference(flat)
+assert bool(jnp.all(order_kernel == order_ref))
+print("[sort_moe] Pallas merge-sort order == stable oracle ✓")
+
+# 3. end-to-end dispatch equivalence (einsum with generous capacity vs sort)
+import dataclasses
+cfg_nodrop = dataclasses.replace(cfg, capacity_factor=8.0)
+out_einsum, _ = moe_einsum(params, cfg_nodrop, x, group_size=128)
+out_sorted, _ = moe_sort_dispatch(
+    params, cfg, x, sort_fn=lambda k: pallas_argsort(k, tile=512,
+                                                     interpret=True))
+err = float(jnp.max(jnp.abs(out_einsum - out_sorted)))
+print(f"[sort_moe] einsum(no-drop) vs sort dispatch max err = {err:.2e}")
+assert err < 1e-2
+print("[sort_moe] OK")

@@ -1,0 +1,71 @@
+"""End-to-end training driver with fault tolerance.
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 30
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+``100m`` is the assignment's ~100M-parameter configuration (12L, d=768,
+GQA 12/4, 32k vocab — GPT-2-small-class); ``tiny`` finishes in seconds on
+CPU for CI.  Features exercised: Kvik microbatch plan, atomic+async
+checkpoints, preemption-safe exit (Ctrl-C), resume (rerun the same command),
+straggler telemetry.
+"""
+
+import argparse
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.step import microbatch_plan
+
+PRESETS = {
+    "tiny": ModelConfig(name="tiny-lm", family="dense", num_layers=2,
+                        d_model=128, num_heads=4, num_kv_heads=2,
+                        head_dim=32, d_ff=512, vocab_size=2048,
+                        loss_chunk=512),
+    "100m": ModelConfig(name="lm-100m", family="dense", num_layers=12,
+                        d_model=768, num_heads=12, num_kv_heads=4,
+                        head_dim=64, d_ff=3072, vocab_size=32768,
+                        loss_chunk=1024),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="checkpoints/train_lm")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    model = Model(cfg)
+    print(f"[train_lm] {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    opt_cfg = AdamWConfig(lr_peak=args.lr, warmup_steps=max(10, args.steps // 20),
+                          decay_steps=args.steps)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                          global_batch=args.global_batch, seed=0)
+    n_mb = microbatch_plan(args.global_batch, dp=1,
+                           tokens_per_seq=args.seq_len,
+                           target_tokens_per_replica=args.global_batch
+                           * args.seq_len // 2)
+    loop_cfg = LoopConfig(total_steps=args.steps,
+                          ckpt_every=max(10, args.steps // 4),
+                          ckpt_dir=args.ckpt_dir, log_every=5,
+                          num_microbatches=n_mb)
+    trainer = Trainer(model, opt_cfg, data_cfg, loop_cfg)
+    trainer.install_signal_handlers()
+    state = trainer.run()
+    losses = [m["loss"] for m in trainer.metrics_log]
+    if len(losses) >= 2:
+        print(f"[train_lm] loss {losses[0]:.3f} → {losses[-1]:.3f} "
+              f"({'improved' if losses[-1] < losses[0] else 'check config'})")
+
+
+if __name__ == "__main__":
+    main()

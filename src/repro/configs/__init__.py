@@ -1,0 +1,7 @@
+"""Architecture configs: one module per assigned architecture + registry."""
+
+from .base import (ModelConfig, ShapeConfig, SHAPES, TRAIN_4K, PREFILL_32K,
+                   DECODE_32K, LONG_500K, shape_applicable)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K",
+           "DECODE_32K", "LONG_500K", "shape_applicable"]

@@ -1,0 +1,265 @@
+"""Model/architecture configuration schema + shape suite.
+
+Every assigned architecture gets a ``<id>.py`` module exporting ``CONFIG``
+(the exact published shape) and ``smoke_config()`` (a reduced same-family
+config for CPU tests).  ``repro.configs.registry`` maps ``--arch`` ids to
+these modules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None    # default d_model // num_heads
+
+    # --- attention ---------------------------------------------------------
+    attn_type: str = "gqa"            # gqa | mla
+    rope_theta: float = 1e4
+    rotary_fraction: float = 1.0      # ChatGLM3: 0.5 ("2d" half-rotary)
+    # MLA (deepseek)
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # --- MoE -----------------------------------------------------------------
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                 # per-expert hidden (d_ff if 0)
+    moe_layer_period: int = 1         # layer i is MoE iff i % period == offset
+    moe_layer_offset: int = 0
+    first_dense_layers: int = 0       # deepseek: first layer(s) stay dense
+    dense_d_ff: int = 0               # d_ff for dense layers in MoE models
+    capacity_factor: float = 1.25
+
+    # --- SSM / hybrid --------------------------------------------------------
+    block_pattern: Tuple[str, ...] = ()   # cycled; entries: attn|mamba|mlstm|slstm
+    ssm_state_dim: int = 16
+    ssm_conv_dim: int = 4
+    ssm_expand: int = 2
+    mlstm_chunk: int = 256
+
+    # --- VLM -----------------------------------------------------------------
+    cross_attn_period: int = 0        # every k-th layer gets cross-attention
+    num_image_tokens: int = 0
+
+    # --- enc-dec (audio) ------------------------------------------------------
+    encoder_layers: int = 0           # >0 → enc-dec; num_layers = decoder layers
+    max_source_positions: int = 0
+    decoder_prefill_len: int = 1024   # decoder prompt length for prefill shapes
+
+    # --- numerics ------------------------------------------------------------
+    ffn_type: str = "swiglu"          # swiglu | gelu | relu2
+    vocab_padding: int = 0            # pad vocab so TP divides it (whisper)
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    moment_dtype: str = "float32"     # AdamW m/v (jamba drops to bf16 to fit)
+
+    # --- scheduling hooks (the paper's knobs, per-model defaults) -------------
+    loss_chunk: int = 2048            # vocab-xent chunk size
+    remat: str = "block"              # none | block  (remat each scanned block)
+    fsdp: bool = False                # also shard params over the data axis
+    moe_2d_shard: bool = False        # expert hidden dim over 'data' too —
+                                      # only worth it when the expert bank
+                                      # alone exceeds HBM (Jamba-398B);
+                                      # costs a psum over 'data' per layer
+
+    # ------------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def padded_vocab(self) -> int:
+        return self.vocab_size + self.vocab_padding
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        return self.block_pattern or ("attn",)
+
+    def layer_kind(self, i: int) -> str:
+        return self.pattern[i % len(self.pattern)]
+
+    def layer_is_moe(self, i: int) -> bool:
+        if not self.is_moe or i < self.first_dense_layers:
+            return False
+        return (i % self.moe_layer_period) == self.moe_layer_offset
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def dense_ffn_dim(self) -> int:
+        return self.dense_d_ff or self.d_ff
+
+    def dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.compute_dtype)
+
+    def pdtype(self) -> jnp.dtype:
+        return jnp.dtype(self.param_dtype)
+
+    # --- parameter counting (for MODEL_FLOPS = 6·N·D roofline term) ----------
+    def param_count(self, *, active_only: bool = False) -> int:
+        """Analytic parameter count; ``active_only`` counts top-k experts only
+        (MoE activated parameters, the 6·N_active·D convention)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n = 0
+        # embeddings (+untied head)
+        n += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+
+        def attn_params() -> int:
+            if self.attn_type == "mla":
+                r, rd = self.kv_lora_rank, self.qk_rope_head_dim
+                qd = self.num_heads * (self.qk_nope_head_dim + rd)
+                p = d * qd                                   # q proj
+                p += d * (r + rd)                            # kv down + k_rope
+                p += r * self.num_heads * (self.qk_nope_head_dim
+                                           + self.v_head_dim)  # kv up
+                p += self.num_heads * self.v_head_dim * d    # out
+                return p
+            qd = self.num_heads * hd
+            kvd = self.num_kv_heads * hd
+            return d * (qd + 2 * kvd) + qd * d
+
+        def ffn_params(ff: int) -> int:
+            mats = 3 if self.ffn_type == "swiglu" else 2
+            return mats * d * ff
+
+        def mamba_params() -> int:
+            di = self.ssm_expand * d
+            dt_rank = max(1, d // 16)
+            p = d * 2 * di                    # in_proj
+            p += di * self.ssm_conv_dim       # conv
+            p += di * (dt_rank + 2 * self.ssm_state_dim)  # x_proj
+            p += dt_rank * di + di            # dt_proj
+            p += di * self.ssm_state_dim      # A
+            p += di * 2                       # D, skip
+            p += di * d                       # out_proj
+            return p
+
+        def mlstm_params() -> int:
+            di = self.ssm_expand * d
+            dh = di // self.num_heads
+            p = d * 2 * di                    # up proj (x and gate paths)
+            p += 3 * self.num_heads * dh * dh  # blockdiag q, k, v
+            p += 2 * di * self.num_heads      # i, f gate projections
+            p += di * d                       # down proj
+            return p
+
+        def slstm_params() -> int:
+            p = 4 * d * d                     # i, f, z, o recurrent blocks
+            p += 4 * d * d                    # recurrent weights
+            p += int(4 / 3 * d * d) * 2       # up/down ffn (conservative)
+            return p
+
+        total_layers = self.num_layers + self.encoder_layers
+        for i in range(self.num_layers):
+            kind = self.layer_kind(i)
+            if kind == "attn":
+                n += attn_params()
+            elif kind == "mamba":
+                n += mamba_params()
+            elif kind == "mlstm":
+                n += mlstm_params()
+            elif kind == "slstm":
+                n += slstm_params()
+            if self.cross_attn_period and (i % self.cross_attn_period
+                                           == self.cross_attn_period - 1):
+                n += attn_params()
+            # FFN
+            if self.d_ff > 0 or self.is_moe:
+                if self.layer_is_moe(i):
+                    k = self.top_k if active_only else self.num_experts
+                    n += k * ffn_params(self.expert_d_ff)
+                    n += self.num_shared_experts * ffn_params(self.expert_d_ff)
+                elif self.dense_ffn_dim > 0:
+                    n += ffn_params(self.dense_ffn_dim)
+        # encoder stack (attention + mlp, non-causal)
+        for i in range(self.encoder_layers):
+            n += attn_params() + ffn_params(self.dense_ffn_dim)
+        # norms etc. are negligible; include final norm
+        n += d
+        return n
+
+    def encoder_param_count(self) -> int:
+        """Encoder-stack share of param_count (enc-dec MODEL_FLOPS split)."""
+        if not self.is_encdec:
+            return 0
+        d, hd = self.d_model, self.resolved_head_dim
+        attn = d * (self.num_heads * hd + 2 * self.num_kv_heads * hd) \
+            + self.num_heads * hd * d
+        mats = 3 if self.ffn_type == "swiglu" else 2
+        ffn = mats * d * self.dense_ffn_dim
+        return self.encoder_layers * (attn + ffn)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell: kind decides which step function is lowered."""
+
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", "train", 4096, 256)
+PREFILL_32K = ShapeConfig("prefill_32k", "prefill", 32768, 32)
+DECODE_32K = ShapeConfig("decode_32k", "decode", 32768, 128)
+LONG_500K = ShapeConfig("long_500k", "decode", 524288, 1)
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+# Families whose attention cost per decode step is linear in cache length but
+# whose *prefill/train* is quadratic: long_500k (decode) is only run for
+# architectures with sub-quadratic sequence mixing (SSM / hybrid), per the
+# assignment instructions.
+SUBQUADRATIC_FAMILIES = {"ssm", "hybrid"}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runnable?, reason-if-not). Encodes the DESIGN.md §Arch-applicability
+    skip rules."""
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, ("long_500k needs sub-quadratic attention; "
+                       f"{cfg.name} is full-attention ({cfg.family})")
+    return True, ""
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K",
+           "DECODE_32K", "LONG_500K", "shape_applicable",
+           "SUBQUADRATIC_FAMILIES"]

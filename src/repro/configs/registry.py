@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` → config module."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from . import (chatglm3_6b, deepseek_v2_lite, jamba_1_5_large,
+               llama32_vision_11b, llama3_8b, llama4_scout_17b, minitron_4b,
+               whisper_medium, xlstm_1_3b, yi_9b)
+from .base import ModelConfig
+
+_MODULES = {
+    "minitron-4b": minitron_4b,
+    "chatglm3-6b": chatglm3_6b,
+    "llama3-8b": llama3_8b,
+    "yi-9b": yi_9b,
+    "llama-3.2-vision-11b": llama32_vision_11b,
+    "llama4-scout-17b-a16e": llama4_scout_17b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite,
+    "xlstm-1.3b": xlstm_1_3b,
+    "jamba-1.5-large-398b": jamba_1_5_large,
+    "whisper-medium": whisper_medium,
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].smoke_config()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "all_configs"]

@@ -1,0 +1,103 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation: the dry-run lowers
+``train_step`` / ``serve_step`` against these.  For enc-dec and VLM families
+the modality frontend is a stub — the spec provides the precomputed
+embeddings directly (frames / image patches), per the assignment.
+
+Conventions (documented in DESIGN.md):
+* enc-dec train/prefill: encoder sees ``seq_len`` stub frames; the decoder
+  sees ``seq_len // 4`` tokens (train) / ``decoder_prefill_len`` (prefill).
+* enc-dec decode: decoder KV cache = ``seq_len``; cross-attention KV over
+  1500 encoder positions (whisper's native 30 s window).
+* decode shapes: cache buffers are part of the spec (serve_step signature is
+  ``(params, tokens, cache, lengths)``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from .base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _stub_inputs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        out["image_embeds"] = SDS((batch, cfg.num_image_tokens, cfg.d_model),
+                                  jnp.dtype(cfg.compute_dtype))
+    if cfg.is_encdec:
+        out["frames"] = SDS((batch, seq, cfg.d_model),
+                            jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def decoder_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Token-sequence length seen by the decoder stack for a given shape."""
+    if not cfg.is_encdec:
+        return shape.seq_len
+    if shape.kind == "train":
+        return max(128, shape.seq_len // 4)
+    if shape.kind == "prefill":
+        return cfg.decoder_prefill_len
+    return shape.seq_len  # decode: cache length
+
+
+def cross_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if cfg.family == "vlm":
+        return cfg.num_image_tokens
+    if cfg.is_encdec:
+        return 1500 if shape.kind == "decode" else shape.seq_len
+    return 0
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    S = decoder_len(cfg, shape)
+    specs = {"tokens": SDS((B, S), jnp.int32),
+             "labels": SDS((B, S), jnp.int32)}
+    specs.update(_stub_inputs(cfg, B, shape.seq_len))
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Dict[str, Any]:
+    B = shape.global_batch
+    S = decoder_len(cfg, shape)
+    specs = {"tokens": SDS((B, S), jnp.int32)}
+    specs.update(_stub_inputs(cfg, B, shape.seq_len))
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, model: Model
+                       ) -> Dict[str, Any]:
+    B = shape.global_batch
+    S = shape.seq_len
+    cache = model.abstract_cache(B, S, cross_len=cross_len(cfg, shape))
+    cache = jax.tree.map(lambda x: SDS(x.shape, x.dtype), cache)
+    return {
+        "tokens": SDS((B,), jnp.int32),
+        "lengths": SDS((B,), jnp.int32),
+        "cache": cache,
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model: Model
+                ) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape, model)
+    raise ValueError(shape.kind)
+
+
+__all__ = ["input_specs", "train_input_specs", "prefill_input_specs",
+           "decode_input_specs", "decoder_len", "cross_len"]

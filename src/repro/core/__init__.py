@@ -1,0 +1,43 @@
+"""repro.core — Kvik's policy layer, adapted to a statically-compiled target.
+
+Public surface:
+
+* Divisibles:  ``WorkRange``, ``BatchWork``, ``SeqWork``, ``TileGrid2D``,
+               ``ZipDivisible``, ``PermRange``
+* Adaptors:    ``bound_depth``, ``even_levels``, ``force_depth``,
+               ``size_limit``, ``cap``, ``join_context``, ``thief_splitting``
+* Schedulers:  ``JoinScheduler``/``schedule_join``, ``ByBlocks``/``by_blocks``,
+               ``AdaptiveScheduler``/``adaptive``
+* Plans:       ``build_plan``, ``demand_split``, ``geometric_blocks``
+* D&C:         ``wrap_iter``, ``work_loop``
+* Simulator:   ``WorkStealingSim``, ``AdaptiveSim``, ``CostModel``
+"""
+
+from .divisible import (Divisible, Producer, WorkRange, BatchWork, SeqWork,
+                        TileGrid2D, ZipDivisible, PermRange,
+                        total_permutations)
+from .adaptors import (Adaptor, StealContext, bound_depth, even_levels,
+                       force_depth, size_limit, cap, join_context,
+                       thief_splitting, BoundDepth, EvenLevels, ForceDepth,
+                       SizeLimit, Cap, JoinContext, ThiefSplitting)
+from .plan import Plan, PlanNode, build_plan, demand_split, geometric_blocks
+from .schedulers import (JoinScheduler, schedule_join, ByBlocks, by_blocks,
+                         BlockStats, AdaptiveScheduler, adaptive)
+from .dnc import wrap_iter, WrappedIter, work_loop
+from .simruntime import (CostModel, SimResult, WorkStealingSim, AdaptiveSim,
+                         static_partition_sim)
+
+__all__ = [
+    "Divisible", "Producer", "WorkRange", "BatchWork", "SeqWork",
+    "TileGrid2D", "ZipDivisible", "PermRange", "total_permutations",
+    "Adaptor", "StealContext", "bound_depth", "even_levels", "force_depth",
+    "size_limit", "cap", "join_context", "thief_splitting",
+    "BoundDepth", "EvenLevels", "ForceDepth", "SizeLimit", "Cap",
+    "JoinContext", "ThiefSplitting",
+    "Plan", "PlanNode", "build_plan", "demand_split", "geometric_blocks",
+    "JoinScheduler", "schedule_join", "ByBlocks", "by_blocks", "BlockStats",
+    "AdaptiveScheduler", "adaptive",
+    "wrap_iter", "WrappedIter", "work_loop",
+    "CostModel", "SimResult", "WorkStealingSim", "AdaptiveSim",
+    "static_partition_sim",
+]

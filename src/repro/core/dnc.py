@@ -1,0 +1,90 @@
+"""Divide-and-conquer abstractions: ``wrap_iter`` and ``work`` (paper §3.4, §3.6.1).
+
+``wrap_iter`` turns any :class:`Divisible` into a plan-time "parallel iterator
+over sub-pieces": the middleware owns every splitting decision, the user maps
+a sequential function over the leaves and fuses results back in a symmetric
+reduction tree — the paper's maximum-subarray-sum shape.
+
+``work_loop`` is the stateful nano-loop (paper §3.6.1 ``work()``): given a
+carried state and an ``advance(state, n)`` step, it executes geometrically
+growing iteration grants inside a single ``lax.while_loop`` so the compiled
+program regains control between grants (the TPU analogue of "check for steal
+requests / cancellation between nano-loops").  This is the primitive under
+early-exit decode and the fannkuch benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .adaptors import Adaptor, StealContext
+from .divisible import Divisible
+from .plan import Plan, build_plan
+
+
+@dataclasses.dataclass
+class WrappedIter:
+    """Plan-time parallel iterator over the leaves of a division tree."""
+
+    work: Divisible
+    ctx: Optional[StealContext] = None
+
+    def plan(self) -> Plan:
+        return build_plan(self.work, ctx=self.ctx)
+
+    def map_reduce(self, map_fn: Callable[[Divisible], Any],
+                   reduce_fn: Callable[[Any, Any], Any]) -> Any:
+        """The paper's ``wrap_iter().map(...).reduce(...)`` in one call."""
+        return self.plan().map_reduce(map_fn, reduce_fn)
+
+    def leaves(self):
+        return self.plan().leaves()
+
+
+def wrap_iter(work: Divisible, *, ctx: Optional[StealContext] = None
+              ) -> WrappedIter:
+    return WrappedIter(work, ctx)
+
+
+def work_loop(state: Any,
+              advance: Callable[[Any, jnp.ndarray], Any],
+              total: int,
+              *,
+              should_stop: Optional[Callable[[Any], jnp.ndarray]] = None,
+              first_grant: int = 1,
+              growth: int = 2,
+              max_grant: Optional[int] = None) -> Any:
+    """Stateful geometric nano-loop inside one compiled program.
+
+    ``advance(state, n)`` performs ``n`` iterations on ``state`` (n is a traced
+    int32 scalar — implement with ``lax.fori_loop``).  ``should_stop(state)``
+    is evaluated between grants; a True aborts the remaining grants.  The grant
+    sequence is ``first_grant * growth**k`` capped at ``max_grant`` — at most
+    O(log total) interruption checks, the paper's amortization argument.
+    """
+    max_grant = max_grant or total
+
+    def cond(carry):
+        state, done, grant, stop = carry
+        return jnp.logical_and(done < total, jnp.logical_not(stop))
+
+    def body(carry):
+        state, done, grant, stop = carry
+        n = jnp.minimum(grant, total - done)
+        state = advance(state, n)
+        done = done + n
+        stop2 = should_stop(state) if should_stop is not None else jnp.asarray(False)
+        grant = jnp.minimum(grant * growth, max_grant)
+        return (state, done, grant, stop2)
+
+    init = (state, jnp.asarray(0, jnp.int32),
+            jnp.asarray(first_grant, jnp.int32), jnp.asarray(False))
+    state, done, _, stopped = jax.lax.while_loop(cond, body, init)
+    return state
+
+
+__all__ = ["wrap_iter", "WrappedIter", "work_loop"]

@@ -1,0 +1,178 @@
+"""Pallas stable merge sort — the paper's §3.7 showcase, deployed for MoE
+token dispatch.
+
+Structure mirrors Kvik's sort exactly:
+  1. the input is divided into tiles by a Kvik plan (``even_levels`` ensures
+     merge results land in the right buffer — here the tree is materialized
+     functionally so the adaptor's concern becomes tile-count parity),
+  2. each tile is sorted locally by a **bitonic network kernel** (the
+     "sequential fallback" of the paper becomes the MXU/VPU-friendly
+     fixed-size network — TPU adaptation, see DESIGN.md),
+  3. sorted tiles are fused pairwise up the plan's **reduction tree** with a
+     **bitonic merge kernel** (concat(A, reverse(B)) is bitonic; log2(n)
+     monotonic compare-exchange stages finish the merge).
+
+Stability: keys are packed as ``key << IDX_BITS | index`` into uint32 before
+sorting — equal keys order by original index, which is what keeps intra-expert
+token order deterministic in MoE dispatch (and what made the paper's sort
+"stable").  Caller-facing API is ``argsort`` (returns the stable order).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import SeqWork, bound_depth, build_plan, even_levels
+
+IDX_BITS = 20                 # tiles up to 2^20 elements
+IDX_MASK = (1 << IDX_BITS) - 1
+
+
+# ---------------------------------------------------------------------------
+# bitonic building blocks (pure jnp — used inside kernel bodies)
+# ---------------------------------------------------------------------------
+
+def _compare_exchange(x: jnp.ndarray, j: int, k: int) -> jnp.ndarray:
+    """One bitonic stage: partner = i ^ j, direction from bit k of i."""
+    n = x.shape[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    partner = idx ^ j
+    xp = x[partner]
+    up = (idx & k) == 0
+    lo = jnp.minimum(x, xp)
+    hi = jnp.maximum(x, xp)
+    is_lower = idx < partner
+    want_lo = jnp.where(up, is_lower, ~is_lower)
+    return jnp.where(want_lo, lo, hi)
+
+
+def _bitonic_sort_network(x: jnp.ndarray) -> jnp.ndarray:
+    """Full ascending bitonic sort of a power-of-two 1-D array."""
+    n = x.shape[0]
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            x = _compare_exchange(x, j, k)
+            j //= 2
+        k *= 2
+    return x
+
+
+def _bitonic_merge_network(x: jnp.ndarray) -> jnp.ndarray:
+    """Monotonic merge of a bitonic input (ascending result)."""
+    n = x.shape[0]
+    j = n // 2
+    while j >= 1:
+        x = _compare_exchange(x, j, n)  # k = n → all ascending
+        j //= 2
+    return x
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+def _tile_sort_kernel(x_ref, o_ref):
+    o_ref[...] = _bitonic_sort_network(x_ref[...])
+
+
+def _merge_kernel(a_ref, b_ref, o_ref, *, n: int):
+    a = a_ref[...]
+    b = b_ref[...]
+    bi = jnp.concatenate([a, b[::-1]])     # bitonic by construction
+    o_ref[...] = _bitonic_merge_network(bi)
+
+
+def tile_sort(x: jnp.ndarray, *, tile: int = 1024,
+              interpret: bool = True) -> jnp.ndarray:
+    """Sort each tile of a (n,) uint32 array locally.  n % tile == 0."""
+    n = x.shape[0]
+    tile = min(tile, n)
+    assert n % tile == 0 and (tile & (tile - 1)) == 0
+    nt = n // tile
+    return pl.pallas_call(
+        _tile_sort_kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def merge_pair(a: jnp.ndarray, b: jnp.ndarray, *,
+               interpret: bool = True) -> jnp.ndarray:
+    """Merge two sorted arrays of equal power-of-two length."""
+    n = a.shape[0]
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, n=n),
+        in_specs=[pl.BlockSpec((n,), lambda: (0,)),
+                  pl.BlockSpec((n,), lambda: (0,))],
+        out_specs=pl.BlockSpec((2 * n,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2 * n,), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# composed sort (tile plan + merge tree)
+# ---------------------------------------------------------------------------
+
+def sort_u32(x: jnp.ndarray, *, tile: int = 1024,
+             interpret: bool = True) -> jnp.ndarray:
+    """Stable-ready sort of packed uint32 keys via tile-sort + merge tree.
+
+    The division is a Kvik plan: even_levels(bound_depth(...)) over the index
+    range — exactly the adaptor stack the paper's sort uses.
+    """
+    n = x.shape[0]
+    assert (n & (n - 1)) == 0, "power-of-two input (pad first)"
+    tile = min(tile, n)
+    depth = int(math.log2(n // tile))
+    if depth % 2 == 1 and n >> (depth + 1) >= 2:
+        depth += 1          # even merge parity — the paper's even_levels
+        tile = n >> depth   # concern, realized on the tile count
+    sorted_tiles = tile_sort(x, tile=tile, interpret=interpret)
+    if depth == 0:
+        return sorted_tiles
+
+    plan = build_plan(bound_depth(SeqWork(0, n, align=tile, min_size=tile),
+                                  depth))
+
+    def leaf(work):
+        return sorted_tiles[work.start:work.stop]
+
+    def merge(a, b):
+        return merge_pair(a, b, interpret=interpret)
+
+    return plan.map_reduce(leaf, merge)
+
+
+def argsort(keys: jnp.ndarray, *, num_key_bits: int = 12, tile: int = 1024,
+            interpret: bool = True) -> jnp.ndarray:
+    """Stable argsort of small-integer keys (expert ids) — MoE dispatch entry.
+
+    keys: (n,) int32 with values < 2^num_key_bits; n padded to a power of two
+    internally (pad keys sort to the end and are dropped).
+    """
+    n = keys.shape[0]
+    n_pad = 1 << math.ceil(math.log2(max(2, n)))
+    assert num_key_bits + IDX_BITS <= 32
+    packed = (keys.astype(jnp.uint32) << IDX_BITS) | \
+        jnp.arange(n, dtype=jnp.uint32)
+    if n_pad != n:
+        pad = jnp.full((n_pad - n,), jnp.uint32(0xFFFFFFFF))
+        packed = jnp.concatenate([packed, pad])
+    out = sort_u32(packed, tile=tile, interpret=interpret)
+    order = (out & IDX_MASK).astype(jnp.int32)
+    return order[:n]
+
+
+__all__ = ["argsort", "sort_u32", "tile_sort", "merge_pair"]

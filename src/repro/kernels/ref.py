@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every kernel — the ground truth for allclose tests."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B,Sq,H,hd)  k,v: (B,Sk,KV,hd) — exact softmax attention, fp32."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_reference(q: jnp.ndarray, k_cache: jnp.ndarray,
+                               v_cache: jnp.ndarray, lengths: jnp.ndarray, *,
+                               scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B,H,hd)  caches: (B,S,KV,hd)  lengths: (B,)."""
+    B, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    k = jnp.repeat(k_cache, G, axis=2).astype(jnp.float32)
+    v = jnp.repeat(v_cache, G, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) * scale
+    mask = jnp.arange(S)[None, :] < lengths[:, None]
+    logits = jnp.where(mask[:, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v).astype(q.dtype)
+
+
+def stable_argsort_reference(keys: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argsort(keys, stable=True).astype(jnp.int32)
+
+
+__all__ = ["attention_reference", "decode_attention_reference",
+           "stable_argsort_reference"]

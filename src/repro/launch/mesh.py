@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state.  Shapes fixed by the assignment:
+
+  single-pod : (data=16, model=16)            = 256 chips (one v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+``make_host_mesh`` builds reduced same-topology meshes for CPU tests.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) != n:   # dry-run: 512 forced host devices, use first n
+        import numpy as np
+        from jax.sharding import Mesh
+        return Mesh(np.array(devices[:n]).reshape(shape), axes)
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh over host (CPU) devices for tests; same axis names."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

@@ -1,0 +1,65 @@
+"""Serving launcher: batched requests through the Kvik-policy engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
+        --requests 8 --max-new 32 [--smoke]
+
+Chunked (by_blocks) prefill + find_first early-exit decode; per-request
+wasted-work stats are printed — the serving realization of the paper's
+interruptible-computation claims.
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.models.model import Model
+from repro.serve.engine import Engine, EngineConfig, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--eos-id", type=int, default=7)
+    ap.add_argument("--smoke", action="store_true", default=None)
+    args = ap.parse_args()
+
+    smoke = args.smoke if args.smoke is not None else \
+        (jax.device_count() < 256)
+    cfg = get_smoke_config(args.arch) if smoke else get_config(args.arch)
+    if cfg.is_encdec or cfg.family == "vlm":
+        raise SystemExit(f"{args.arch}: use a text-only arch for this demo "
+                         f"(modality stubs need explicit inputs)")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"[launch.serve] {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+
+    engine = Engine(model, params,
+                    EngineConfig(max_batch=args.max_batch,
+                                 eos_id=args.eos_id))
+    rng = np.random.RandomState(0)
+    for rid in range(args.requests):
+        plen = int(rng.randint(8, 48))
+        engine.submit(Request(
+            rid=rid, prompt=rng.randint(3, cfg.vocab_size,
+                                        plen).astype(np.int32),
+            max_new=args.max_new))
+    served = 0
+    while True:
+        batch = engine.step()
+        if not batch:
+            break
+        for r in batch:
+            served += 1
+            print(f"[launch.serve] req {r.rid}: {len(r.result)} tokens, "
+                  f"decode-blocks={r.stats.blocks}, "
+                  f"wasted={r.stats.wasted_fraction:.1%}")
+    print(f"[launch.serve] served {served}/{args.requests}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model substrate: layers, attention (GQA/MLA/cross), MoE, SSM, assembly."""
+
+from .model import Model, build_model
+from .transformer import LayerSpec, layer_specs, stage_layout
+
+__all__ = ["Model", "build_model", "LayerSpec", "layer_specs", "stage_layout"]

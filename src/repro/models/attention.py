@@ -1,0 +1,538 @@
+"""Attention: GQA (llama/minitron/yi/chatglm), MLA (deepseek), cross-attn (VLM,
+enc-dec), plus decode paths over KV caches.
+
+Blockwise attention is the pure-JAX flash attention used for training/prefill.
+Its (q-block × kv-block) tiling is a Kvik plan: the lower-triangular tile set
+of a causal attention is exactly the leaf set of a ``TileGrid2D`` division, and
+the q/kv chunk sizes are chosen by the same adaptors that size every other
+task in this framework (see ``attn_tile_plan``).  Upper-triangle tiles are
+*skipped at plan time* — the compiled program does no masked-out FLOPs at
+block granularity, which matters for the §Roofline compute term.
+
+The Pallas kernel (``repro.kernels.flash_attention``) implements the same
+schedule for the TPU target; this module is the lowering-friendly reference
+used by the dry-run (Pallas custom-calls do not partition under GSPMD).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core import SeqWork, bound_depth, build_plan
+from .layers import Params, apply_rope, dense_init, rope_table
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Tile planning (the Kvik hook)
+# ---------------------------------------------------------------------------
+
+def attn_chunk_sizes(seq_q: int, seq_kv: int, *, target_chunk: int = 2048
+                     ) -> Tuple[int, int]:
+    """Pick (q_chunk, kv_chunk) via a bound_depth plan over the sequence.
+
+    The depth is chosen so leaves are ≈ ``target_chunk`` — the same policy
+    TBB's grain-size heuristic encodes, expressed as a Kvik adaptor.
+    """
+    def leaf(seq: int) -> int:
+        depth = max(0, math.ceil(math.log2(max(1, seq / target_chunk))))
+        plan = build_plan(bound_depth(SeqWork(0, seq), depth))
+        sizes = plan.leaf_sizes()
+        return max(sizes)
+    return leaf(seq_q), leaf(seq_kv)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — training / prefill
+# ---------------------------------------------------------------------------
+
+def _chunk_attn_update(carry, qc, kc, vc, mask):
+    """One (q-chunk, kv-chunk) tile with running-softmax state.
+
+    qc: (B, KV, G, Cq, hd)   kc: (B, Ck, KV, hd)   vc: (B, Ck, KV, hv)
+    carry: (m, l, acc) with shapes (B,KV,G,Cq), (B,KV,G,Cq), (B,KV,G,Cq,hv)
+    mask: (Cq, Ck) additive (0 / -inf) or None.
+    """
+    m, l, acc = carry
+    logits = jnp.einsum("bkgqd,bskd->bkgqs", qc, kc,
+                        preferred_element_type=jnp.float32)
+    if mask is not None:
+        logits = logits + mask
+    m_new = jnp.maximum(m, logits.max(axis=-1))
+    p = jnp.exp(logits - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l = l * alpha + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqs,bskv->bkgqv", p.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+    acc = acc * alpha[..., None] + pv
+    return (m_new, l, acc)
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool, scale: Optional[float] = None,
+                        q_chunk: int = 1024, kv_chunk: int = 1024,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """q: (B,Sq,H,hd)  k: (B,Sk,KV,hd)  v: (B,Sk,KV,hv) → (B,Sq,H,hv).
+
+    GQA grouping is done by reshaping q to (B,KV,G,·,·) — repeated KV heads
+    are never materialized.  Causal tiles above the diagonal are skipped at
+    plan time (python loop ⇒ static slices in the jaxpr).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    hv = v.shape[-1]
+    G = H // KV
+    scale = scale if scale is not None else (1.0 / math.sqrt(hd))
+    q = (q * scale).reshape(B, Sq, KV, G, hd)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    n_q = (Sq + q_chunk - 1) // q_chunk
+
+    # Pad KV to a tile multiple once; in-scan masks handle validity.  The
+    # outer q loop stays in Python (static causal windows → true block-level
+    # FLOP skipping); the inner kv walk is a lax.scan, so the HLO holds ONE
+    # tile body per q-chunk instead of O(n²) unrolled tiles — the unrolled
+    # form blew both compile time and buffer live-ranges (EXPERIMENTS §Perf).
+    Skp = ((Sk + kv_chunk - 1) // kv_chunk) * kv_chunk
+    if Skp != Sk:
+        pad = Skp - Sk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    outs = []
+    for iq in range(n_q):
+        q0 = iq * q_chunk
+        cq = min(q_chunk, Sq - q0)
+        qc = q[:, q0:q0 + cq].transpose(0, 2, 3, 1, 4)  # (B,KV,G,Cq,hd)
+        # causal window for this q chunk: kv positions [0, q_offset+q0+cq)
+        k_hi = min(Sk, q_offset + q0 + cq) if causal else Sk
+        n_k = (k_hi + kv_chunk - 1) // kv_chunk
+        q_pos = q_offset + q0 + jnp.arange(cq)
+
+        m = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, KV, G, cq), jnp.float32)
+        acc = jnp.zeros((B, KV, G, cq, hv), jnp.float32)
+
+        def body(carry, ik, q_pos=q_pos, k_hi=k_hi, qc=qc):
+            kc = jax.lax.dynamic_slice_in_dim(k, ik * kv_chunk, kv_chunk, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ik * kv_chunk, kv_chunk, 1)
+            k_pos = ik * kv_chunk + jnp.arange(kv_chunk)
+            valid = k_pos[None, :] < k_hi
+            if causal:
+                valid = valid & (q_pos[:, None] >= k_pos[None, :])
+            mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+            return _chunk_attn_update(carry, qc, kc, vc, mask), None
+
+        if n_k <= 2:
+            carry = (m, l, acc)
+            for ik in range(n_k):
+                carry, _ = body(carry, ik)
+        else:
+            carry, _ = jax.lax.scan(body, (m, l, acc), jnp.arange(n_k))
+        m, l, acc = carry
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(B, cq, H, hv)
+                    .astype(v.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def plain_attention(q, k, v, *, causal: bool, scale=None, q_offset: int = 0):
+    """Reference O(S²)-memory attention — smoke tests and tiny shapes."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else (1.0 / math.sqrt(hd))
+    qg = (q * scale).reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        k_pos = jnp.arange(Sk)
+        mask = jnp.where(q_pos[:, None] >= k_pos[None, :], 0.0, NEG_INF)
+        logits = logits + mask
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskv->bkgqv", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, v.shape[-1]).astype(v.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, lengths: jnp.ndarray, *,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """One-token attention against a cache.
+
+    q: (B,H,hd)  caches: (B,S,KV,·)  lengths: (B,) valid prefix lengths.
+    Softmax reductions over a sharded S axis lower to cheap scalar
+    all-reduces — this is the distributed flash-decode combine (the paper's
+    divide-and-conquer reduction tree) emerging from GSPMD for free.
+    """
+    B, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = scale if scale is not None else (1.0 / math.sqrt(hd))
+    qg = (q * scale).reshape(B, KV, G, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]  # (B,S)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bskv->bkgv", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, v_cache.shape[-1]).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sharded (expanded + padded MHA) projections
+#
+# The production mesh fixes model-parallelism at 16.  GQA kv-head counts
+# (2/4/8) and some q-head counts (24, 40) don't divide 16, so under a mesh
+# context we rewrite the projections into an expanded MHA layout:
+#   * kv heads are replicated up to the q-head count (grouping is undone),
+#   * heads are zero-padded up to the next multiple of the model axis.
+# Zero-padded q/v heads provably contribute exactly zero to the output, and
+# wo's padded rows are zero so gradients are exact.  The overhead (repeated
+# KV compute, Hp/H padding FLOPs) is measured in §Roofline — it is the cost
+# of honoring the fixed mesh without touching stored parameters.
+# ---------------------------------------------------------------------------
+
+def padded_head_count(H: int, tp_n: int) -> int:
+    return -(-H // tp_n) * tp_n
+
+
+# 'minimal' replicates kv heads only up to the mesh width (llama3: 8→16,
+# 2×); 'full' replicates to the q-head count (8→32, 4×) — kept switchable
+# for the §Perf before/after measurements (hillclimb C).
+KV_EXPANSION_MODE = ["minimal"]
+
+
+def expanded_kv_count(H: int, KV: int, tp_n: int) -> int:
+    if KV_EXPANSION_MODE[0] == "full":
+        return padded_head_count(H, tp_n)
+    if H % tp_n == 0:
+        return KV if KV % tp_n == 0 else tp_n
+    return padded_head_count(H, tp_n)
+
+
+def expanded_qkv_weights(params: Params, cfg: ModelConfig, tp_n: int):
+    """Expand (wq, wk, wv, wo) to a TP-aligned layout.
+
+    q heads pad to Hp (next multiple of tp); kv heads replicate to KV_e =
+    expanded_kv_count(...) — the minimal alignment that keeps every
+    attention tensor local under 'model' sharding.  Zero-padded q heads and
+    zero wo rows make padding exactly output- and gradient-neutral."""
+    d = params["wq"].shape[0]
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    Hp = padded_head_count(H, tp_n)
+    KV_e = expanded_kv_count(H, KV, tp_n)
+    repl = KV_e // KV
+    wq = params["wq"].reshape(d, H, hd)
+    wq = jnp.pad(wq, ((0, 0), (0, Hp - H), (0, 0)))
+    kv_idx = jnp.arange(KV_e) // repl
+    wk = params["wk"].reshape(d, KV, hd)[:, kv_idx]
+    wv = params["wv"].reshape(d, KV, hd)[:, kv_idx]
+    wo = params["wo"].reshape(H, hd, d)
+    wo = jnp.pad(wo, ((0, Hp - H), (0, 0), (0, 0)))
+    return (wq.reshape(d, Hp * hd), wk.reshape(d, KV_e * hd),
+            wv.reshape(d, KV_e * hd), wo.reshape(Hp * hd, d), Hp, KV_e)
+
+
+def _attn_batch_spec():
+    from ..dist.sharding import dp
+    return dp()
+
+
+def sharded_mha(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                positions: Optional[jnp.ndarray], *, causal: bool,
+                kv_source: Optional[jnp.ndarray] = None, q_offset: int = 0,
+                target_chunk: int = 2048) -> jnp.ndarray:
+    """Self/cross attention in expanded-padded MHA layout, head-sharded over
+    the model axis.  ``kv_source`` switches to cross-attention (no RoPE)."""
+    from ..dist.sharding import constrain, current_ctx
+    from jax.sharding import PartitionSpec as P
+    ctx = current_ctx()
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    wq, wk, wv, wo, Hp, KV_e = expanded_qkv_weights(params, cfg, ctx.tp)
+    kv_in = kv_source if kv_source is not None else x
+    Skv = kv_in.shape[1]
+    dpb = _attn_batch_spec()
+    hspec = P(dpb, None, "model", None)
+
+    q = jnp.einsum("bsd,de->bse", x, wq).reshape(B, S, Hp, hd)
+    k = jnp.einsum("bsd,de->bse", kv_in, wk).reshape(B, Skv, KV_e, hd)
+    v = jnp.einsum("bsd,de->bse", kv_in, wv).reshape(B, Skv, KV_e, hd)
+    if kv_source is None and positions is not None:
+        rd = int(hd * cfg.rotary_fraction)
+        rd -= rd % 2
+        cos, sin = rope_table(positions, rd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, rotary_dims=rd)
+        k = apply_rope(k, cos, sin, rotary_dims=rd)
+    q, k, v = constrain(q, hspec), constrain(k, hspec), constrain(v, hspec)
+
+    qc, kc = attn_chunk_sizes(S, Skv, target_chunk=target_chunk)
+    if S <= 256 and Skv <= 1024:
+        o = plain_attention(q, k, v, causal=causal, q_offset=q_offset)
+    else:
+        o = blockwise_attention(q, k, v, causal=causal, q_chunk=qc,
+                                kv_chunk=kc, q_offset=q_offset)
+    o = constrain(o, hspec)
+    return jnp.einsum("bse,ed->bsd", o.reshape(B, S, Hp * hd), wo)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention layer
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig, *, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype()
+    return {
+        "wq": dense_init(ks[0], d, H * hd, dt),
+        "wk": dense_init(ks[1], d, KV * hd, dt),
+        "wv": dense_init(ks[2], d, KV * hd, dt),
+        "wo": dense_init(ks[3], H * hd, d, dt),
+    }
+
+
+def gqa_project_qkv(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                    positions: Optional[jnp.ndarray], *,
+                    rope: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) → q (B,S,H,hd), k,v (B,S,KV,hd) with RoPE applied."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(B, S, cfg.num_heads, hd)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+    if rope and positions is not None:
+        rd = int(hd * cfg.rotary_fraction)
+        rd -= rd % 2
+        cos, sin = rope_table(positions, rd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, rotary_dims=rd)
+        k = apply_rope(k, cos, sin, rotary_dims=rd)
+    return q, k, v
+
+
+def gqa_project_kv(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                   positions: Optional[jnp.ndarray]
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """KV-only projection (cache payloads during prefill)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(
+        B, S, cfg.num_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(
+        B, S, cfg.num_kv_heads, hd)
+    if positions is not None:
+        rd = int(hd * cfg.rotary_fraction)
+        rd -= rd % 2
+        cos, sin = rope_table(positions, rd, cfg.rope_theta)
+        k = apply_rope(k, cos, sin, rotary_dims=rd)
+    return k, v
+
+
+def mla_cache_payload(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                      positions: jnp.ndarray) -> jnp.ndarray:
+    """(B,S,r+rd) latent cache payload — cheap, no head expansion."""
+    rd = cfg.qk_rope_head_dim
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_down"])
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["wk_rope"])
+    cos, sin = rope_table(positions, rd, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return jnp.concatenate([c_kv, k_rope], axis=-1)
+
+
+def gqa_self_attention(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                       positions: jnp.ndarray, *, causal: bool = True,
+                       q_offset: int = 0,
+                       target_chunk: int = 2048) -> jnp.ndarray:
+    """Full-sequence self attention (train / encoder)."""
+    from ..dist.sharding import current_ctx
+    if current_ctx() is not None:
+        return sharded_mha(params, cfg, x, positions, causal=causal,
+                           q_offset=q_offset, target_chunk=target_chunk)
+    B, S, D = x.shape
+    q, k, v = gqa_project_qkv(params, cfg, x, positions)
+    qc, kc = attn_chunk_sizes(S, S, target_chunk=target_chunk)
+    if S <= 256:
+        o = plain_attention(q, k, v, causal=causal, q_offset=q_offset)
+    else:
+        o = blockwise_attention(q, k, v, causal=causal, q_chunk=qc,
+                                kv_chunk=kc, q_offset=q_offset)
+    return jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), params["wo"])
+
+
+def cross_attention(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                    kv_states: jnp.ndarray,
+                    *, target_chunk: int = 2048) -> jnp.ndarray:
+    """Cross-attention: queries from x, keys/values from kv_states (no RoPE,
+    no causal mask).  kv_states: (B, Skv, D)."""
+    from ..dist.sharding import current_ctx
+    if current_ctx() is not None:
+        return sharded_mha(params, cfg, x, None, causal=False,
+                           kv_source=kv_states, target_chunk=target_chunk)
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    Skv = kv_states.shape[1]
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(B, S, cfg.num_heads, hd)
+    k = jnp.einsum("bsd,de->bse", kv_states, params["wk"]).reshape(
+        B, Skv, cfg.num_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", kv_states, params["wv"]).reshape(
+        B, Skv, cfg.num_kv_heads, hd)
+    if S <= 256 and Skv <= 1024:
+        o = plain_attention(q, k, v, causal=False)
+    else:
+        qc, kc = attn_chunk_sizes(S, Skv, target_chunk=target_chunk)
+        o = blockwise_attention(q, k, v, causal=False, q_chunk=qc, kv_chunk=kc)
+    return jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), params["wo"])
+
+
+def gqa_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+               k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+               positions: jnp.ndarray, lengths: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step.  x: (B,1,D); caches (B,S,KV,hd); positions (B,);
+    returns (y (B,1,D), k_new (B,1,KV,hd), v_new) — the caller scatters the
+    new kv into the cache (cache update strategies differ per layout)."""
+    B = x.shape[0]
+    q, k, v = gqa_project_qkv(params, cfg, x, positions[:, None])
+    o = decode_attention(q[:, 0], k_cache, v_cache, lengths)
+    y = jnp.einsum("be,ed->bd", o.reshape(B, -1), params["wo"])[:, None, :]
+    return y, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.num_heads
+    r = cfg.kv_lora_rank
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    dt = cfg.pdtype()
+    return {
+        "wq": dense_init(ks[0], d, H * (nd + rd), dt),        # queries
+        "wkv_down": dense_init(ks[1], d, r, dt),              # latent c_kv
+        "wk_rope": dense_init(ks[2], d, rd, dt),              # shared rope key
+        "wkv_up": dense_init(ks[3], r, H * (nd + vd), dt),    # k_nope ++ v
+        "wo": dense_init(ks[4], H * vd, d, dt),
+    }
+
+
+def mla_project(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                positions: jnp.ndarray):
+    """Returns q (B,S,H,nd+rd), k (B,S,H,nd+rd), v (B,S,H,vd), and the cache
+    payload (c_kv ++ k_rope) of size r+rd per token."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    cos, sin = rope_table(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_down"])       # (B,S,r)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["wk_rope"])      # (B,S,rd)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)          # (B,S,1,rd)
+
+    kv = jnp.einsum("bsr,re->bse", c_kv, params["wkv_up"]).reshape(
+        B, S, H, nd + vd)
+    k_nope, v = kv[..., :nd], kv[..., nd:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rd))], axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    cache_payload = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+    return qq, k, v, cache_payload
+
+
+def mla_self_attention(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                       positions: jnp.ndarray, *, causal: bool = True,
+                       q_offset: int = 0, target_chunk: int = 2048):
+    from ..dist.sharding import constrain, current_ctx, dp
+    from jax.sharding import PartitionSpec as P
+    B, S, D = x.shape
+    q, k, v, _ = mla_project(params, cfg, x, positions)
+    if current_ctx() is not None:   # MLA is MHA: heads shard directly
+        hspec = P(dp(), None, "model", None)
+        q, k, v = constrain(q, hspec), constrain(k, hspec), constrain(v, hspec)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    # MLA is MHA at compute time (KV=H)
+    if S <= 256:
+        o = plain_attention(q, k, v, causal=causal, scale=scale,
+                            q_offset=q_offset)
+    else:
+        qc, kc = attn_chunk_sizes(S, S, target_chunk=target_chunk)
+        o = blockwise_attention(q, k, v, causal=causal, scale=scale,
+                                q_chunk=qc, kv_chunk=kc, q_offset=q_offset)
+    return jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), params["wo"])
+
+
+def mla_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+               latent_cache: jnp.ndarray, positions: jnp.ndarray,
+               lengths: jnp.ndarray):
+    """Absorbed MLA decode: score directly against the latent cache.
+
+    latent_cache: (B, S, r+rd) = c_kv ++ k_rope.  The current token's payload
+    is scattered into the cache *before* attention (it attends to itself).
+    Returns (y (B,1,D), updated latent cache).
+    """
+    B = x.shape[0]
+    H = cfg.num_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    S = latent_cache.shape[1]
+    scale = 1.0 / math.sqrt(nd + rd)
+
+    q = jnp.einsum("bd,de->be", x[:, 0], params["wq"]).reshape(B, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    cos, sin = rope_table(positions[:, None], rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope[:, None], cos, sin)[:, 0]           # (B,H,rd)
+
+    # current token's cache payload, written before scoring
+    c_new = jnp.einsum("bd,dr->br", x[:, 0], params["wkv_down"])
+    k_rope_new = jnp.einsum("bd,dr->br", x[:, 0], params["wk_rope"])
+    k_rope_new = apply_rope(k_rope_new[:, None, None, :], cos, sin)[:, 0, 0]
+    payload = jnp.concatenate([c_new, k_rope_new], axis=-1)
+    at = (jnp.arange(S)[None, :] == lengths[:, None])[:, :, None]
+    latent_cache = jnp.where(at, payload[:, None], latent_cache)
+
+    # absorb W_uk into the query: q_abs (B,H,r)
+    w_uk = params["wkv_up"].reshape(r, H, nd + vd)[..., :nd]       # (r,H,nd)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+
+    c_cache = latent_cache[..., :r]                                # (B,S,r)
+    rope_cache = latent_cache[..., r:]                             # (B,S,rd)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_abs, c_cache,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhr,bsr->bhs", q_rope, rope_cache,
+                           preferred_element_type=jnp.float32)) * scale
+    mask = jnp.arange(S)[None, :] < (lengths + 1)[:, None]
+    logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o_latent = jnp.einsum("bhs,bsr->bhr", p.astype(c_cache.dtype), c_cache,
+                          preferred_element_type=jnp.float32)      # (B,H,r)
+    w_uv = params["wkv_up"].reshape(r, H, nd + vd)[..., nd:]       # (r,H,vd)
+    o = jnp.einsum("bhr,rhv->bhv", o_latent.astype(x.dtype), w_uv)
+    y = jnp.einsum("be,ed->bd", o.reshape(B, H * vd), params["wo"])[:, None]
+    return y, latent_cache
+
+
+__all__ = [
+    "attn_chunk_sizes", "blockwise_attention", "plain_attention",
+    "decode_attention", "gqa_init", "gqa_project_qkv", "gqa_self_attention",
+    "cross_attention", "gqa_decode", "mla_init", "mla_project",
+    "mla_self_attention", "mla_decode",
+]

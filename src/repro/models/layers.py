@@ -1,0 +1,214 @@
+"""Shared layers: norms, RoPE variants, FFNs, embeddings, chunked loss.
+
+All layers are pure functions over explicit parameter pytrees (nested dicts of
+arrays) — no framework dependency, full control over sharding annotations.
+Initializers return parameters in ``cfg.param_dtype``; computation runs in
+``cfg.compute_dtype`` (mixed precision).
+
+The cross-entropy loss is computed in sequence chunks planned by the core
+scheduler (``SeqWork`` + ``bound_depth``): with 202k–256k vocabularies the
+full logits tensor is the single largest activation in the model, and chunking
+it is a genuine deployment requirement, not a toy — the chunk plan is a Kvik
+plan.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import SeqWork, bound_depth, build_plan
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE — full, half (ChatGLM's "RoPE 2d" applies rotary to half the dims),
+# and positions-only tables for decode.
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for a rotary table over ``head_dim`` dims."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_table(positions: jnp.ndarray, head_dim: int, theta: float
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables of shape positions.shape + (head_dim//2,)."""
+    inv = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               *, rotary_dims: Optional[int] = None) -> jnp.ndarray:
+    """Rotate the first ``rotary_dims`` dims of the head dimension.
+
+    x: (..., seq, heads, head_dim); cos/sin: (..., seq, rotary_dims//2).
+    ``rotary_dims=None`` rotates everything (llama style); ChatGLM3 rotates
+    only the first half of each head ("2d" RoPE: the other half carries
+    positional information from the prefix scheme — kept unrotated here).
+    """
+    hd = x.shape[-1]
+    rd = rotary_dims or hd
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    c = cos[..., None, :].astype(x.dtype)  # broadcast over heads
+    s = sin[..., None, :].astype(x.dtype)
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    if rd < hd:
+        out = jnp.concatenate([out, xp], axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": dense_init(k1, d, d_ff, dtype),
+            "up": dense_init(k2, d, d_ff, dtype),
+            "down": dense_init(k3, d_ff, d, dtype)}
+
+
+def swiglu(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, params["gate"])
+    u = jnp.einsum("...d,df->...f", x, params["up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["down"])
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"up": dense_init(k1, d, d_ff, dtype),
+            "up_b": jnp.zeros((d_ff,), dtype),
+            "down": dense_init(k2, d_ff, d, dtype),
+            "down_b": jnp.zeros((d,), dtype)}
+
+
+def gelu_mlp(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, params["up"]) + params["up_b"]
+    h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, params["down"]) + params["down_b"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": embed_init(key, vocab, d, dtype)}
+
+
+def embed(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,vd->...v", x, params["table"])
+
+
+def chunked_softmax_xent(head_params: Params, hidden: jnp.ndarray,
+                         labels: jnp.ndarray, *, chunk: int = 1024,
+                         mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Cross-entropy over a huge vocabulary without materializing full logits.
+
+    The sequence axis is split by a Kvik plan (SeqWork + bound_depth sized so
+    leaves ≈ ``chunk``) and scanned; each leaf computes logits for its chunk
+    only.  Peak activation drops from seq×vocab to chunk×vocab.
+    Returns the summed loss and the token count (for exterior normalization).
+    """
+    b, s, d = hidden.shape
+    table = head_params["table"]  # (vocab, d)
+
+    depth = max(0, math.ceil(math.log2(max(1, s / chunk))))
+    plan = build_plan(bound_depth(SeqWork(0, s, align=1), depth))
+    sizes = plan.leaf_sizes()
+    # equal leaves → scan; else unrolled (plans over pow2 seq are balanced)
+    if len(set(sizes)) == 1 and len(sizes) > 1:
+        c = sizes[0]
+        hid = hidden.reshape(b, len(sizes), c, d).transpose(1, 0, 2, 3)
+        lab = labels.reshape(b, len(sizes), c).transpose(1, 0, 2)
+        msk = (mask.reshape(b, len(sizes), c).transpose(1, 0, 2)
+               if mask is not None else jnp.ones_like(lab, jnp.float32))
+
+        def body(carry, xs):
+            h, l, m = xs
+            logits = jnp.einsum("bcd,vd->bcv", h, table).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+            loss = ((lse - gold) * m).sum()
+            return carry + loss, None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                (hid, lab, msk))
+    else:
+        total = jnp.zeros((), jnp.float32)
+        for w in plan.leaves():
+            h = hidden[:, w.start:w.stop]
+            l = labels[:, w.start:w.stop]
+            m = (mask[:, w.start:w.stop] if mask is not None
+                 else jnp.ones(l.shape, jnp.float32))
+            logits = jnp.einsum("bcd,vd->bcv", h, table).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+            total = total + ((lse - gold) * m).sum()
+    denom = (mask.sum() if mask is not None
+             else jnp.asarray(b * s, jnp.float32))
+    return total / jnp.maximum(denom, 1.0)
+
+
+__all__ = [
+    "Params", "dense_init", "embed_init", "rmsnorm_init", "rmsnorm",
+    "layernorm_init", "layernorm", "rope_freqs", "rope_table", "apply_rope",
+    "swiglu_init", "swiglu", "gelu_mlp_init", "gelu_mlp",
+    "embedding_init", "embed", "unembed", "chunked_softmax_xent",
+]

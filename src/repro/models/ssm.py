@@ -1,0 +1,524 @@
+"""State-space / recurrent mixers: Mamba (Jamba), mLSTM + sLSTM (xLSTM).
+
+Training/prefill paths are *chunked*: the sequence is cut into chunks by the
+core scheduler's geometry (``mlstm_chunk`` config, aligned like every other
+block size in this framework), each chunk is processed with an intra-chunk
+parallel form (associative scan for Mamba, stabilized attention-like form for
+mLSTM), and a small recurrent state is carried between chunks with
+``lax.scan``.  This is the TPU-native adaptation of these architectures: the
+(B,S,Di,N) discretized tensors that CUDA kernels fuse are never materialized
+beyond one chunk.
+
+Decode paths are O(1) per token over explicit state pytrees.
+
+sLSTM is genuinely sequential (its recurrence is why xLSTM mixes block types),
+so its training path is an honest ``lax.scan`` over time.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import Params, dense_init
+
+F32 = jnp.float32
+
+
+def _c(x, *axes):
+    """Sharding constraint shorthand (no-op outside a mesh context).
+
+    GSPMD's propagation through checkpoint+scan+associative_scan loses the
+    TP sharding of SSM activations (observed: full-Di fp32 tensors replicated
+    per chip in the Jamba dry-run).  Explicit constraints at the block
+    boundaries pin it down."""
+    from ..dist.sharding import constrain, dp
+    spec = [dp() if a == "dp" else a for a in axes]
+    return constrain(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (shared by mamba / xlstm blocks)
+# ---------------------------------------------------------------------------
+
+def causal_conv_init(key, dim: int, width: int, dtype) -> Params:
+    w = (jax.random.normal(key, (width, dim), F32) / math.sqrt(width)).astype(dtype)
+    return {"w": w, "b": jnp.zeros((dim,), dtype)}
+
+
+def causal_conv(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,Di) depthwise causal conv, width = params['w'].shape[0]."""
+    w = params["w"]
+    width = w.shape[0]
+    pad = jnp.zeros(x.shape[:1] + (width - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(width):  # width is 4 — unrolled taps beat a conv op here
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out + params["b"]
+
+
+def causal_conv_step(params: Params, x: jnp.ndarray, buf: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,Di); buf: (B,width-1,Di) past inputs → (y (B,Di), new buf)."""
+    w = params["w"]
+    width = w.shape[0]
+    full = jnp.concatenate([buf, x[:, None, :]], axis=1)   # (B,width,Di)
+    y = jnp.einsum("bwd,wd->bd", full, w) + params["b"]
+    return y, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6) block
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    dt = cfg.pdtype()
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dt),
+        "conv": causal_conv_init(ks[1], di, cfg.ssm_conv_dim, dt),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * n, dt),
+        "dt_proj": dense_init(ks[3], dt_rank, di, dt),
+        "dt_bias": jnp.zeros((di,), dt),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=F32), (di, n))).astype(F32),
+        "D": jnp.ones((di,), F32),
+        "out_proj": dense_init(ks[4], di, d, dt),
+    }
+
+
+def _mamba_inner(params: Params, cfg: ModelConfig, xc: jnp.ndarray,
+                 h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One chunk of the selective scan.  xc: (B,c,Di) post-conv activations,
+    h0: (B,Di,N) carry → (y (B,c,Di), h_final)."""
+    n = cfg.ssm_state_dim
+    dt_rank = max(1, cfg.d_model // 16)
+    proj = jnp.einsum("bcd,de->bce", xc, params["x_proj"])
+    dt_in, Bs, Cs = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bcr,rd->bcd", dt_in, params["dt_proj"])
+        + params["dt_bias"]).astype(F32)                       # (B,c,Di)
+    delta = _c(delta, "dp", None, "model")
+    A = -jnp.exp(params["A_log"])                               # (Di,N)
+    dA = _c(jnp.exp(delta[..., None] * A), "dp", None, "model", None)
+    dBx = (delta * xc.astype(F32))[..., None] * Bs.astype(F32)[:, :, None, :]
+    dBx = _c(dBx, "dp", None, "model", None)
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return (a1 * a2, b2 + a2 * b1)
+
+    prefA, within = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    states = within + prefA * h0[:, None]                       # (B,c,Di,N)
+    states = _c(states, "dp", None, "model", None)
+    y = jnp.einsum("bcdn,bcn->bcd", states, Cs.astype(F32))
+    y = y + params["D"] * xc.astype(F32)
+    return y.astype(xc.dtype), states[:, -1]
+
+
+def mamba_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                  h0: Optional[jnp.ndarray] = None,
+                  conv_buf: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B,S,D) → (y (B,S,D), state {ssm, conv})."""
+    B, S, D = x.shape
+    di = cfg.ssm_expand * D
+    n = cfg.ssm_state_dim
+    chunk = min(cfg.mlstm_chunk, S)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xz = _c(xz, "dp", None, "model")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    if conv_buf is None:
+        xc = causal_conv(params["conv"], xin)
+    else:  # continuing prefill: prepend buffered inputs
+        width = params["conv"]["w"].shape[0]
+        ext = jnp.concatenate([conv_buf, xin], axis=1)
+        xc = causal_conv(params["conv"], ext)[:, width - 1:]
+    xc = _c(jax.nn.silu(xc), "dp", None, "model")
+
+    h0 = h0 if h0 is not None else jnp.zeros((B, di, n), F32)
+    h0 = _c(h0, "dp", "model", None)
+    if S % chunk == 0 and S > chunk:
+        xs = xc.reshape(B, S // chunk, chunk, di).transpose(1, 0, 2, 3)
+
+        def body(h, xck):
+            y, h2 = _mamba_inner(params, cfg, xck, h)
+            return h2, y
+
+        hF, ys = jax.lax.scan(body, h0, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    else:
+        y, hF = _mamba_inner(params, cfg, xc, h0)
+
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    width = params["conv"]["w"].shape[0]
+    if S >= width - 1:
+        new_buf = xin[:, S - (width - 1):]
+    else:
+        base = (conv_buf if conv_buf is not None
+                else jnp.zeros((B, width - 1, di), x.dtype))
+        new_buf = jnp.concatenate([base, xin], axis=1)[:, -(width - 1):]
+    return out, {"ssm": hF, "conv": new_buf}
+
+
+def mamba_step(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+               state: Dict[str, jnp.ndarray]
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B,1,D) decode step."""
+    B = x.shape[0]
+    n = cfg.ssm_state_dim
+    dt_rank = max(1, cfg.d_model // 16)
+    xz = jnp.einsum("bd,de->be", x[:, 0], params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, new_buf = causal_conv_step(params["conv"], xin, state["conv"])
+    xc = jax.nn.silu(xc)
+    proj = jnp.einsum("bd,de->be", xc, params["x_proj"])
+    dt_in, Bs, Cs = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("br,rd->bd", dt_in, params["dt_proj"])
+        + params["dt_bias"]).astype(F32)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(delta[..., None] * A)                          # (B,Di,N)
+    dBx = (delta * xc.astype(F32))[..., None] * Bs.astype(F32)[:, None, :]
+    h = dA * state["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cs.astype(F32)) + params["D"] * xc.astype(F32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bd,de->be", y, params["out_proj"])[:, None]
+    return out, {"ssm": h, "conv": new_buf}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM's matrix-memory block) — stabilized chunkwise parallel form
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    dt = cfg.pdtype()
+    return {
+        "up": dense_init(ks[0], d, 2 * di, dt),
+        "conv": causal_conv_init(ks[1], di, cfg.ssm_conv_dim, dt),
+        # block-diagonal per-head projections (the official mLSTM shape —
+        # full matrices would quadruple the parameter count at 4 heads)
+        "wq": (jax.random.normal(ks[2], (h, di // h, di // h), F32)
+               / math.sqrt(di // h)).astype(dt),
+        "wk": (jax.random.normal(ks[3], (h, di // h, di // h), F32)
+               / math.sqrt(di // h)).astype(dt),
+        "wv": (jax.random.normal(ks[4], (h, di // h, di // h), F32)
+               / math.sqrt(di // h)).astype(dt),
+        "wi": dense_init(ks[5], di, h, dt),
+        "wf": dense_init(ks[6], di, h, dt),
+        "norm_scale": jnp.ones((di,), dt),
+        "down": dense_init(ks[7], di, d, dt),
+    }
+
+
+def _headwise_rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, nheads: int,
+                      eps: float = 1e-5) -> jnp.ndarray:
+    B, S, di = x.shape
+    xh = x.reshape(B, S, nheads, di // nheads).astype(F32)
+    var = jnp.mean(jnp.square(xh), axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, S, di) * scale.astype(F32)).astype(x.dtype)
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, carry):
+    """One stabilized chunk.
+
+    q,k,v: (B,c,H,dh); log_i/log_f: (B,c,H) fp32.
+    carry = (C (B,H,dh,dh), n (B,H,dh), m (B,H)) fp32.
+    Returns (h (B,c,H,dh), new carry).
+    """
+    B, c, H, dh = q.shape
+    Chat, nhat, m_prev = carry
+    scale = 1.0 / math.sqrt(dh)
+
+    F = jnp.cumsum(log_f, axis=1)                    # (B,c,H) inclusive
+    F_tot = F[:, -1]                                 # (B,H)
+    # intra-chunk log-decay matrix b_ij = F_i - log_f_i? — use exclusive cumsum
+    # for the query side so position i attends to j ≤ i with gain
+    # exp(F_i - F_j + log_i_j): F here must be *inclusive of j's gate* on the
+    # key side and exclusive on the diagonal.  Standard form:
+    #   b_ij = (F_i - F_j) + log_i_j  for j ≤ i, where F is inclusive cumsum.
+    b = (F[:, :, None, :] - F[:, None, :, :]
+         + log_i[:, None, :, :])                     # (B,c_q,c_k,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    b = jnp.where(tri[None, :, :, None], b, -jnp.inf)
+
+    g = F + m_prev[:, None, :]                       # inter gain (B,c,H)
+    m_intra = jnp.max(b, axis=2)                     # (B,c,H)
+    m_i = jnp.maximum(m_intra, g)
+    m_i = jnp.maximum(m_i, -1e30)                    # guard all -inf rows
+
+    P = jnp.exp(b - m_i[:, :, None, :])              # (B,c,c,H)
+    qk = jnp.einsum("bihd,bjhd->bijh", q.astype(F32), k.astype(F32)) * scale
+    W = P * qk                                       # weighted intra scores
+    num_intra = jnp.einsum("bijh,bjhd->bihd", W, v.astype(F32))
+    den_intra = jnp.einsum("bijh,bjhd->bihd", P, k.astype(F32) * scale)
+    den_intra = jnp.einsum("bihd,bihd->bih", q.astype(F32), den_intra)
+
+    inter_gain = jnp.exp(g - m_i)                    # (B,c,H)
+    num_inter = jnp.einsum("bihd,bhde->bihe", q.astype(F32) * scale, Chat) \
+        * inter_gain[..., None]
+    den_inter = jnp.einsum("bihd,bhd->bih", q.astype(F32) * scale, nhat) \
+        * inter_gain
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+
+    # carry update
+    decay_k = F_tot[:, None, :] - F + log_i          # (B,c,H): gate j→end
+    m_next = jnp.maximum(F_tot + m_prev, jnp.max(decay_k, axis=1))
+    kv_gain = jnp.exp(decay_k - m_next[:, None, :])  # (B,c,H)
+    C_new = (jnp.exp(F_tot + m_prev - m_next)[:, :, None, None] * Chat
+             + jnp.einsum("bjh,bjhd,bjhe->bhde", kv_gain, k.astype(F32),
+                          v.astype(F32)))
+    n_new = (jnp.exp(F_tot + m_prev - m_next)[:, :, None] * nhat
+             + jnp.einsum("bjh,bjhd->bhd", kv_gain, k.astype(F32)))
+    return h, (C_new, n_new, m_next)
+
+
+def mlstm_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                  state: Optional[Dict[str, jnp.ndarray]] = None
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B, S, D = x.shape
+    di = cfg.ssm_expand * D
+    H = cfg.num_heads
+    dh = di // H
+    chunk = min(cfg.mlstm_chunk, S)
+
+    xz = jnp.einsum("bsd,de->bse", x, params["up"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_buf = state["conv"] if state is not None else None
+    if conv_buf is None:
+        xc = causal_conv(params["conv"], xin)
+    else:
+        width = params["conv"]["w"].shape[0]
+        ext = jnp.concatenate([conv_buf, xin], axis=1)
+        xc = causal_conv(params["conv"], ext)[:, width - 1:]
+    xc = jax.nn.silu(xc)
+
+    xch = xc.reshape(B, S, H, dh)
+    xih = xin.reshape(B, S, H, dh)
+    q = _c(jnp.einsum("bshd,hde->bshe", xch, params["wq"]),
+           "dp", None, None, "model")
+    k = _c(jnp.einsum("bshd,hde->bshe", xch, params["wk"]),
+           "dp", None, None, "model")
+    v = _c(jnp.einsum("bshd,hde->bshe", xih, params["wv"]),
+           "dp", None, None, "model")
+    log_i = jnp.einsum("bsd,dh->bsh", xc, params["wi"]).astype(F32)
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", xc, params["wf"]).astype(F32))
+
+    if state is not None:
+        carry = (state["C"], state["n"], state["m"])
+    else:
+        carry = (jnp.zeros((B, H, dh, dh), F32), jnp.zeros((B, H, dh), F32),
+                 jnp.zeros((B, H), F32))
+    carry = (_c(carry[0], "dp", None, "model", None),
+             _c(carry[1], "dp", None, "model"), carry[2])
+
+    if S % chunk == 0 and S > chunk:
+        nc = S // chunk
+        def rs(t, last):
+            return t.reshape((B, nc, chunk) + last).transpose(
+                (1, 0, 2) + tuple(range(3, 3 + len(last))))
+        qs, ks_, vs = rs(q, (H, dh)), rs(k, (H, dh)), rs(v, (H, dh))
+        lis, lfs = rs(log_i, (H,)), rs(log_f, (H,))
+
+        def body(c, xs):
+            qc, kc, vc, lic, lfc = xs
+            h, c2 = _mlstm_chunk(qc, kc, vc, lic, lfc, c)
+            return c2, h
+
+        carry, hs = jax.lax.scan(body, carry, (qs, ks_, vs, lis, lfs))
+        h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    else:
+        h, carry = _mlstm_chunk(q, k, v, log_i, log_f, carry)
+
+    h = h.reshape(B, S, di).astype(x.dtype)
+    h = _headwise_rmsnorm(h, params["norm_scale"], H)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", h, params["down"])
+
+    width = params["conv"]["w"].shape[0]
+    if S >= width - 1:
+        new_buf = xin[:, S - (width - 1):]
+    else:
+        base = (conv_buf if conv_buf is not None
+                else jnp.zeros((B, width - 1, di), x.dtype))
+        new_buf = jnp.concatenate([base, xin], axis=1)[:, -(width - 1):]
+    C_, n_, m_ = carry
+    return out, {"C": C_, "n": n_, "m": m_, "conv": new_buf}
+
+
+def mlstm_step(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+               state: Dict[str, jnp.ndarray]
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B,1,D) decode step with matrix-memory state."""
+    B = x.shape[0]
+    D = x.shape[-1]
+    di = cfg.ssm_expand * D
+    H = cfg.num_heads
+    dh = di // H
+    scale = 1.0 / math.sqrt(dh)
+
+    xz = jnp.einsum("bd,de->be", x[:, 0], params["up"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, new_buf = causal_conv_step(params["conv"], xin, state["conv"])
+    xc = jax.nn.silu(xc)
+    q = jnp.einsum("bhd,hde->bhe", xc.reshape(B, H, dh), params["wq"])
+    k = jnp.einsum("bhd,hde->bhe", xc.reshape(B, H, dh), params["wk"])
+    v = jnp.einsum("bhd,hde->bhe", xin.reshape(B, H, dh), params["wv"])
+    log_i = jnp.einsum("bd,dh->bh", xc, params["wi"]).astype(F32)
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bd,dh->bh", xc, params["wf"]).astype(F32))
+
+    m_prev, C_prev, n_prev = state["m"], state["C"], state["n"]
+    m_t = jnp.maximum(log_f + m_prev, log_i)
+    f_t = jnp.exp(log_f + m_prev - m_t)
+    i_t = jnp.exp(log_i - m_t)
+    kf, vf, qf = k.astype(F32), v.astype(F32), q.astype(F32) * scale
+    C_t = f_t[..., None, None] * C_prev + i_t[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n_t = f_t[..., None] * n_prev + i_t[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_t)
+    den = jnp.einsum("bhd,bhd->bh", qf, n_t)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    h = h.reshape(B, 1, di).astype(x.dtype)
+    h = _headwise_rmsnorm(h, params["norm_scale"], H)
+    h = h[:, 0] * jax.nn.silu(z)
+    out = jnp.einsum("bd,de->be", h, params["down"])[:, None]
+    return out, {"C": C_t, "n": n_t, "m": m_t, "conv": new_buf}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — honest sequential recurrence
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ff = int(round(4 * d / 3 / 64)) * 64 or 64
+    ks = jax.random.split(key, 7)
+    dt = cfg.pdtype()
+    return {
+        "conv": causal_conv_init(ks[0], d, cfg.ssm_conv_dim, dt),
+        "w": dense_init(ks[1], d, 4 * d, dt),       # z,i,f,o input weights
+        "r": (jax.random.normal(ks[2], (4, h, dh, dh), F32)
+              / math.sqrt(dh)).astype(dt),          # recurrent, block-diag
+        "b": jnp.zeros((4 * d,), dt),
+        "norm_scale": jnp.ones((d,), dt),
+        "up": dense_init(ks[3], d, 2 * ff, dt),
+        "down": dense_init(ks[4], ff, d, dt),
+    }
+
+
+def _slstm_cell(params: Params, cfg: ModelConfig, wx: jnp.ndarray,
+                st: Tuple[jnp.ndarray, ...]):
+    """wx: (B,4D) precomputed input contribution; state (c,n,h,m) each (B,D)."""
+    B, d4 = wx.shape
+    d = d4 // 4
+    h_heads = cfg.num_heads
+    dh = d // h_heads
+    c, n, hprev, m = st
+    rh = jnp.einsum("bhd,khde->bkhe",
+                    hprev.reshape(B, h_heads, dh).astype(F32),
+                    params["r"].astype(F32)).reshape(B, 4 * d)
+    pre = wx.astype(F32) + rh + params["b"].astype(F32)
+    z_, i_, f_, o_ = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_)
+    o = jax.nn.sigmoid(o_)
+    logf = jax.nn.log_sigmoid(f_)
+    m_t = jnp.maximum(logf + m, i_)
+    i_g = jnp.exp(i_ - m_t)
+    f_g = jnp.exp(logf + m - m_t)
+    c_t = f_g * c + i_g * z
+    n_t = f_g * n + i_g
+    h_t = o * c_t / jnp.maximum(n_t, 1.0)
+    return (c_t, n_t, h_t, m_t)
+
+
+def slstm_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                  state: Optional[Dict[str, jnp.ndarray]] = None
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B, S, D = x.shape
+    conv_buf = state["conv"] if state is not None else None
+    if conv_buf is None:
+        xc = causal_conv(params["conv"], x)
+    else:
+        width = params["conv"]["w"].shape[0]
+        ext = jnp.concatenate([conv_buf, x], axis=1)
+        xc = causal_conv(params["conv"], ext)[:, width - 1:]
+    xc = jax.nn.silu(xc)
+    wx = jnp.einsum("bsd,de->bse", xc, params["w"])        # (B,S,4D)
+
+    if state is not None:
+        st = (state["c"], state["n"], state["h"], state["m"])
+    else:
+        z = jnp.zeros((B, D), F32)
+        st = (z, z, z, jnp.full((B, D), -1e30, F32))
+
+    def body(st, wxt):
+        st2 = _slstm_cell(params, cfg, wxt, st)
+        return st2, st2[2]
+
+    st, hs = jax.lax.scan(body, st, wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)              # (B,S,D)
+
+    # headwise norm + GEGLU projection
+    h = _headwise_rmsnorm(h, params["norm_scale"], cfg.num_heads)
+    uu = jnp.einsum("bsd,de->bse", h, params["up"])
+    a, g = jnp.split(uu, 2, axis=-1)
+    out = jnp.einsum("bsf,fd->bsd", a * jax.nn.gelu(g), params["down"])
+
+    width = params["conv"]["w"].shape[0]
+    if S >= width - 1:
+        new_buf = x[:, S - (width - 1):]
+    else:
+        base = (conv_buf if conv_buf is not None
+                else jnp.zeros((B, width - 1, D), x.dtype))
+        new_buf = jnp.concatenate([base, x], axis=1)[:, -(width - 1):]
+    c, n, hh, m = st
+    return out, {"c": c, "n": n, "h": hh, "m": m, "conv": new_buf}
+
+
+def slstm_step(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+               state: Dict[str, jnp.ndarray]
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B = x.shape[0]
+    xc, new_buf = causal_conv_step(params["conv"], x[:, 0], state["conv"])
+    xc = jax.nn.silu(xc)
+    wx = jnp.einsum("bd,de->be", xc, params["w"])
+    st = (state["c"], state["n"], state["h"], state["m"])
+    c, n, h, m = _slstm_cell(params, cfg, wx, st)
+    hn = _headwise_rmsnorm(h.astype(x.dtype)[:, None], params["norm_scale"],
+                           cfg.num_heads)
+    uu = jnp.einsum("bsd,de->bse", hn, params["up"])
+    a, g = jnp.split(uu, 2, axis=-1)
+    out = jnp.einsum("bsf,fd->bsd", a * jax.nn.gelu(g), params["down"])
+    return out, {"c": c, "n": n, "h": h, "m": m, "conv": new_buf}
+
+
+__all__ = [
+    "causal_conv_init", "causal_conv", "causal_conv_step",
+    "mamba_init", "mamba_forward", "mamba_step",
+    "mlstm_init", "mlstm_forward", "mlstm_step",
+    "slstm_init", "slstm_forward", "slstm_step",
+]

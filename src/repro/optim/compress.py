@@ -1,0 +1,95 @@
+"""Gradient compression with error feedback — DP all-reduce volume ÷4.
+
+int8 block-quantized gradients: per-block (128 values) absmax scaling, the
+quantization residual is carried to the next step (error feedback keeps
+SGD/Adam convergence — Seide et al. / Karimireddy et al.).  The all-reduce
+then moves 1 byte + 1/128 fp16 scale per element instead of 4 (or 2).
+
+Wired into the trainer as an optional gradient transform; the dry-run
+measures the collective-byte reduction on DP-bound cells (§Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+def _pad_to_block(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x → (int8 payload, fp32 per-block scales)."""
+    flat, _ = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype
+               ) -> jnp.ndarray:
+    blocks = q.astype(jnp.float32) * scale[:, None]
+    flat = blocks.reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_tree(grads: Any, error: Any) -> Tuple[Any, Any, Any]:
+    """Quantize grads+error; returns (q_tree, scales_tree, new_error)."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = quantize(target)
+        back = dequantize(q, s, g.shape, jnp.float32)
+        return q, s, (target - back)
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    errs = jax.tree_util.tree_flatten(error)[0]
+    qs, ss, es = zip(*[one(g, e) for g, e in zip(leaves, errs)])
+    u = jax.tree_util.tree_unflatten
+    return u(treedef, qs), u(treedef, ss), u(treedef, es)
+
+
+def decompress_tree(q_tree: Any, s_tree: Any, like: Any) -> Any:
+    return jax.tree.map(
+        lambda q, s, g: dequantize(q, s, g.shape, g.dtype),
+        q_tree, s_tree, like)
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_grad_transform(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Round-trip compress (what the wire would carry) with error feedback.
+
+    In the SPMD program the psum happens over the int8 payload upstream of
+    this call; on this host build we model the numerics exactly and let the
+    dry-run count the byte reduction.
+    """
+    q, s, new_error = compress_tree(grads, error)
+    return decompress_tree(q, s, grads), new_error
+
+
+def compression_ratio(params: Any) -> float:
+    total = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    wire = sum(x.size * 1 + (x.size // BLOCK + 1) * 4
+               for x in jax.tree.leaves(params))
+    return total / wire
+
+
+__all__ = ["quantize", "dequantize", "compress_tree", "decompress_tree",
+           "init_error", "compressed_grad_transform", "compression_ratio",
+           "BLOCK"]

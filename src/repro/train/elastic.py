@@ -1,0 +1,70 @@
+"""Elastic scaling: re-mesh + reshard on device-count changes.
+
+On node failure / preemption / capacity change:
+  1. checkpoint (or use the last atomic one),
+  2. build the best mesh over the surviving devices,
+  3. restore with the NEW mesh's shardings (checkpoint.py restores through
+     host memory, so any (old mesh → new mesh) transition works),
+  4. resume — the data pipeline is counter-based, so no samples are lost or
+     repeated.
+
+Mesh choice: keep the model axis as large as parallelism rules allow (params
+must still fit), give the rest to data.  ``choose_mesh`` is deliberately
+simple and fully tested at host scale (4 → 2 devices in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from ..configs.base import ModelConfig
+
+
+def _factor_pairs(n: int) -> List[Tuple[int, int]]:
+    out = []
+    f = 1
+    while f * f <= n:
+        if n % f == 0:
+            out.append((n // f, f))
+            out.append((f, n // f))
+        f += 1
+    return sorted(set(out))
+
+
+def choose_mesh(num_devices: int, *, prefer_model: int = 16,
+                devices: Optional[list] = None) -> Mesh:
+    """Largest model axis ≤ prefer_model that divides the device count."""
+    best = (num_devices, 1)
+    for data, model in _factor_pairs(num_devices):
+        if model <= prefer_model and model > best[1]:
+            best = (data, model)
+    data, model = best
+    devs = devices if devices is not None else jax.devices()
+    devs = devs[:data * model]
+    return Mesh(np.array(devs).reshape(data, model), ("data", "model"))
+
+
+@dataclasses.dataclass
+class ElasticController:
+    """Orchestrates checkpoint → re-mesh → restore cycles."""
+
+    prefer_model: int = 16
+
+    def remesh(self, surviving_devices: list) -> Mesh:
+        return choose_mesh(len(surviving_devices),
+                           prefer_model=self.prefer_model,
+                           devices=surviving_devices)
+
+    def reshard_state(self, ckpt_mgr, abstract_state, new_shardings):
+        """Restore the latest checkpoint under new-mesh shardings."""
+        state, extra = ckpt_mgr.restore(abstract_state,
+                                        shardings=new_shardings)
+        return state, extra
+
+
+__all__ = ["choose_mesh", "ElasticController"]

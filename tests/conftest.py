@@ -1,0 +1,12 @@
+"""Shared test config.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device; only launch/dryrun.py forces 512 host devices."""
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=50,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.load_profile("repro")

@@ -1,0 +1,158 @@
+"""Property tests for the Divisible trait and adaptors (paper §3.1/§3.3)."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (BatchWork, Cap, PermRange, SeqWork, TileGrid2D,
+                        WorkRange, ZipDivisible, bound_depth, build_plan, cap,
+                        even_levels, force_depth, join_context, size_limit,
+                        thief_splitting, total_permutations)
+
+
+# ---------------------------------------------------------------------------
+# Divisible invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.integers(1, 10_000), st.integers(0, 10_000))
+def test_divide_at_partitions(start, size, idx):
+    w = WorkRange(start, start + size)
+    l, r = w.divide_at(idx)
+    assert l.size() + r.size() == w.size()
+    assert l.start == w.start and r.stop == w.stop and l.stop == r.start
+
+
+@given(st.integers(0, 10_000), st.integers(1, 10_000))
+def test_divide_balanced(start, size):
+    w = WorkRange(start, start + size)
+    l, r = w.divide()
+    assert abs(l.size() - r.size()) <= 1
+    assert l.size() + r.size() == size
+
+
+@given(st.integers(1, 4096), st.integers(1, 64))
+def test_seqwork_alignment(size, align):
+    w = SeqWork(0, size, align=align)
+    if w.should_be_divided():
+        l, r = w.divide()
+        assert l.size() % align == 0 or r.size() == 0 or l.size() == size
+
+
+@given(st.integers(1, 500), st.integers(1, 500))
+def test_tilegrid_divides_longest(rows, cols):
+    g = TileGrid2D(WorkRange(0, rows), WorkRange(0, cols))
+    if g.should_be_divided():
+        l, r = g.divide()
+        assert l.size() + r.size() == g.size()
+
+
+@given(st.integers(2, 1000))
+def test_zip_lockstep(n):
+    z = ZipDivisible((WorkRange(0, n), WorkRange(100, 100 + n)))
+    l, r = z.divide()
+    assert l.parts[0].size() == l.parts[1].size()
+    assert l.parts[0].size() + r.parts[0].size() == n
+
+
+# ---------------------------------------------------------------------------
+# Plans cover the work exactly (no loss, no overlap)
+# ---------------------------------------------------------------------------
+
+def leaves_cover(plan, start, stop):
+    leaves = sorted(plan.leaves(), key=lambda w: w.start)
+    pos = start
+    for w in leaves:
+        assert w.start == pos, "gap or overlap"
+        pos = w.stop
+    assert pos == stop
+
+
+@given(st.integers(1, 100_000), st.integers(0, 8))
+@settings(max_examples=60)
+def test_bound_depth_coverage_and_count(n, d):
+    plan = build_plan(bound_depth(WorkRange(0, n), d))
+    leaves_cover(plan, 0, n)
+    assert plan.num_tasks() <= 2 ** d
+    assert plan.depth() <= d
+
+
+@given(st.integers(1, 20_000), st.integers(4, 1000))
+def test_size_limit(n, lim):
+    plan = build_plan(size_limit(WorkRange(0, n), lim))
+    leaves_cover(plan, 0, n)
+    # every leaf obeys the limit unless it was indivisible
+    for w in plan.leaves():
+        assert w.size() <= max(lim, 1) or w.size() == 1
+
+
+@given(st.integers(2, 10_000), st.integers(1, 6))
+def test_force_depth_complete_tree(n, d):
+    if n < 2 ** d:
+        return
+    plan = build_plan(force_depth(WorkRange(0, n, min_size=n), d))
+    # base refuses division (min_size=n) but force_depth insists
+    assert plan.num_tasks() == 2 ** d
+    leaves_cover(plan, 0, n)
+
+
+@given(st.integers(4, 10_000))
+def test_even_levels_parity(n):
+    plan = build_plan(even_levels(bound_depth(WorkRange(0, n), 3)))
+    for node in plan.root.leaves():
+        assert node.depth % 2 == 0
+    leaves_cover(plan, 0, n)
+
+
+@given(st.integers(1, 10_000), st.integers(1, 64))
+def test_cap_bounds_tasks(n, threshold):
+    plan = build_plan(cap(WorkRange(0, n), threshold))
+    assert plan.num_tasks() <= max(threshold, 1)
+    leaves_cover(plan, 0, n)
+
+
+@given(st.integers(1, 100_000), st.integers(1, 64))
+def test_thief_splitting_static_task_count(n, p):
+    """Without steals: 2^init tasks (counter halving), the TBB bound."""
+    w = thief_splitting(WorkRange(0, n), p=p)
+    plan = build_plan(w)
+    leaves_cover(plan, 0, n)
+    import math
+    init = int(math.log2(max(2, p))) + 1
+    assert plan.num_tasks() <= 2 ** init
+
+
+@given(st.integers(2, 10_000), st.integers(1, 8))
+def test_join_context_left_spine(n, d):
+    """Right children don't divide unless stolen → leaf count = depth+1."""
+    plan = build_plan(join_context(WorkRange(0, n), d))
+    leaves_cover(plan, 0, n)
+    assert plan.num_tasks() <= d + 1
+
+
+# ---------------------------------------------------------------------------
+# PermRange (fannkuch structure, paper §4.3)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(3, 7))
+def test_perm_range_iterates_all(n):
+    total = total_permutations(n)
+    pr = PermRange(n, 0, total)
+    seen = []
+    pr.partial_fold(None, lambda s, p: seen.append(tuple(p)), total)
+    assert len(seen) == total
+    assert len(set(seen)) == total          # all distinct
+    assert seen == sorted(seen)             # lexicographic
+
+
+@given(st.integers(3, 7), st.integers(0, 100))
+def test_perm_range_divide_consistency(n, cut):
+    total = total_permutations(n)
+    cut = cut % max(1, total)
+    l, r = PermRange(n, 0, total).divide_at(cut)
+    out_l, out_r = [], []
+    l.partial_fold(None, lambda s, p: out_l.append(tuple(p)), total)
+    r.partial_fold(None, lambda s, p: out_r.append(tuple(p)), total)
+    full = []
+    PermRange(n, 0, total).partial_fold(
+        None, lambda s, p: full.append(tuple(p)), total)
+    assert out_l + out_r == full

@@ -1,0 +1,152 @@
+"""Per-kernel allclose tests: shape/dtype sweeps against the jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import combine_partials, flash_decode
+from repro.kernels.merge_sort import argsort, merge_pair, sort_u32, tile_sort
+
+
+def rnd(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) \
+        .astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 256, 4, 2, 64),      # GQA 2:1
+    (1, 512, 8, 2, 32),      # GQA 4:1
+    (2, 128, 6, 1, 128),     # MQA-ish, hd=128
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, KV, hd, dtype, causal):
+    q = rnd(0, (B, S, H, hd), dtype)
+    k = rnd(1, (B, S, KV, hd), dtype)
+    v = rnd(2, (B, S, KV, hd), dtype)
+    o = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                        interpret=True)
+    o_ref = ref.attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32),
+        atol=8 * TOL[dtype], rtol=8 * TOL[dtype])
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_invariance(bq, bk):
+    q = rnd(0, (1, 256, 2, 64), jnp.float32)
+    k = rnd(1, (1, 256, 2, 64), jnp.float32)
+    v = rnd(2, (1, 256, 2, 64), jnp.float32)
+    o = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                        interpret=True)
+    o_ref = ref.attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,hd,bk", [
+    (2, 512, 4, 2, 64, 128),
+    (1, 1024, 8, 8, 64, 256),
+    (3, 256, 4, 1, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(B, S, H, KV, hd, bk, dtype):
+    q = rnd(3, (B, H, hd), dtype)
+    kc = rnd(4, (B, S, KV, hd), dtype)
+    vc = rnd(5, (B, S, KV, hd), dtype)
+    lengths = jnp.asarray(
+        np.random.RandomState(0).randint(1, S + 1, B), jnp.int32)
+    o = flash_decode(q, kc, vc, lengths, block_k=bk, interpret=True)
+    o_ref = ref.decode_attention_reference(q, kc, vc, lengths)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32),
+        atol=8 * TOL[dtype], rtol=8 * TOL[dtype])
+
+
+def test_flash_decode_demand_split_invariance():
+    """The reduction-tree shape must not change the result (associativity)."""
+    q = rnd(6, (2, 4, 64), jnp.float32)
+    kc = rnd(7, (2, 1024, 2, 64), jnp.float32)
+    vc = rnd(8, (2, 1024, 2, 64), jnp.float32)
+    lengths = jnp.asarray([700, 1024], jnp.int32)
+    outs = [flash_decode(q, kc, vc, lengths, block_k=128, demand=d,
+                         interpret=True) for d in (1, 2, 4, 8)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5)
+
+
+def test_combine_partials_associative():
+    k1, k2, k3 = (rnd(i, (2, 4), jnp.float32) for i in (10, 11, 12))
+    a1, a2, a3 = (rnd(i, (2, 4, 8), jnp.float32) for i in (13, 14, 15))
+    l1, l2, l3 = (jnp.abs(rnd(i, (2, 4), jnp.float32)) for i in (16, 17, 18))
+    p1, p2, p3 = (k1, l1, a1), (k2, l2, a2), (k3, l3, a3)
+    left = combine_partials(combine_partials(p1, p2), p3)
+    right = combine_partials(p1, combine_partials(p2, p3))
+    for a, b in zip(left, right):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# merge sort
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4096), st.integers(1, 12), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_argsort_matches_stable_oracle(n, key_bits, seed):
+    keys = np.random.RandomState(seed).randint(
+        0, 1 << key_bits, n).astype(np.int32)
+    order = argsort(jnp.asarray(keys), tile=256, interpret=True)
+    expect = ref.stable_argsort_reference(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(order), np.asarray(expect))
+
+
+@pytest.mark.parametrize("n,tile", [(256, 64), (1024, 256), (4096, 512),
+                                    (4096, 1024)])
+def test_sort_u32_sorted(n, tile):
+    x = jnp.asarray(np.random.RandomState(0).randint(
+        0, 2 ** 31, n).astype(np.uint32))
+    out = sort_u32(x, tile=tile, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(np.asarray(x)))
+
+
+def test_tile_sort_sorts_each_tile():
+    x = jnp.asarray(np.random.RandomState(1).randint(
+        0, 1000, 512).astype(np.uint32))
+    out = np.asarray(tile_sort(x, tile=128, interpret=True))
+    for t in range(4):
+        tile = out[t * 128:(t + 1) * 128]
+        assert (np.diff(tile) >= 0).all()
+
+
+def test_merge_pair_merges():
+    a = np.sort(np.random.RandomState(2).randint(0, 1 << 20, 256)) \
+        .astype(np.uint32)
+    b = np.sort(np.random.RandomState(3).randint(0, 1 << 20, 256)) \
+        .astype(np.uint32)
+    out = merge_pair(jnp.asarray(a), jnp.asarray(b), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.sort(np.concatenate([a, b])))
+
+
+def test_argsort_stability_heavy_duplicates():
+    keys = np.zeros(1000, np.int32)          # all equal → order == identity
+    order = argsort(jnp.asarray(keys), tile=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(order), np.arange(1000))

@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests (reduced configs, real arrays, CPU) +
+decode/prefill consistency — the assignment's required smoke coverage."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+from repro.train.step import TrainState, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=32, key=KEY):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 1, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            key, (B, cfg.num_image_tokens, cfg.d_model)).astype(cfg.dtype())
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            key, (B, S, cfg.d_model)).astype(cfg.dtype())
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    model = Model(cfg, max_decoder_positions=64)
+    params = model.init(KEY)
+    loss, metrics = model.loss_fn(params, make_batch(cfg))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+    assert bool(jnp.isfinite(metrics["xent"]))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    model = Model(cfg, max_decoder_positions=64)
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=1)
+    step = make_train_step(model, opt_cfg, num_microbatches=2)
+    params = model.init(KEY)
+    state = TrainState(params=params, opt=init_state(opt_cfg, params))
+    state, metrics = step(state, make_batch(cfg, B=4))
+    assert bool(jnp.isfinite(metrics["loss"])), arch
+    assert bool(jnp.isfinite(metrics["grad_norm"])), arch
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_two_steps_loss_changes(arch):
+    cfg = get_smoke_config(arch)
+    model = Model(cfg, max_decoder_positions=64)
+    opt_cfg = AdamWConfig(lr_peak=1e-2, warmup_steps=1, weight_decay=0.0)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    params = model.init(KEY)
+    state = TrainState(params=params, opt=init_state(opt_cfg, params))
+    losses = []
+    for i in range(3):
+        state, metrics = step(state, make_batch(cfg, key=jax.random.PRNGKey(i)))
+        losses.append(float(metrics["loss"]))
+    assert losses[0] != losses[-1], f"{arch}: optimizer had no effect"
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if not get_smoke_config(a).is_encdec])
+def test_decode_matches_teacher_forcing(arch):
+    """prefill + 3 decode steps == full forward (fp32, dropless MoE)."""
+    cfg = dataclasses.replace(get_smoke_config(arch),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    model = Model(cfg, moe_strategy="sort")
+    params = model.init(KEY)
+    B, S = 2, 17
+    toks = jax.random.randint(KEY, (B, S + 3), 1, cfg.vocab_size)
+    batch = {"tokens": toks[:, :S]}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            KEY, (B, cfg.num_image_tokens, cfg.d_model)).astype(cfg.dtype())
+    _, cache = model.prefill(params, batch, max_seq=S + 3)
+    lengths = jnp.full((B,), S, jnp.int32)
+    for t in range(3):
+        lg, cache = model.decode_step(params, toks[:, S + t], cache, lengths)
+        lengths = lengths + 1
+    full = dict(batch)
+    full["tokens"] = toks
+    lf, _ = model.prefill(params, full, max_seq=S + 3)
+    err = float(jnp.max(jnp.abs(lg - lf)))
+    scale = float(jnp.max(jnp.abs(lf))) + 1e-6
+    assert err / scale < 1e-3, f"{arch}: decode diverges from forward"
+
+
+def test_encdec_decode_runs():
+    cfg = get_smoke_config("whisper-medium")
+    model = Model(cfg, max_decoder_positions=64)
+    params = model.init(KEY)
+    B, S = 2, 16
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 1, cfg.vocab_size),
+             "frames": jax.random.normal(KEY, (B, S, cfg.d_model)
+                                         ).astype(cfg.dtype())}
+    logits, cache = model.prefill(params, batch, max_seq=S + 4)
+    lengths = jnp.full((B,), S, jnp.int32)
+    tok = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
+    for _ in range(3):
+        logits, cache = model.decode_step(params, tok, cache, lengths)
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
+        lengths = lengths + 1
+    assert bool(jnp.isfinite(logits[:, :cfg.vocab_size]).all())
+
+
+def test_vocab_padding_masked():
+    cfg = get_smoke_config("whisper-medium")
+    assert cfg.vocab_padding > 0
+    model = Model(cfg, max_decoder_positions=64)
+    params = model.init(KEY)
+    B, S = 1, 8
+    batch = {"tokens": jnp.ones((B, S), jnp.int32),
+             "frames": jnp.zeros((B, S, cfg.d_model), cfg.dtype())}
+    logits, _ = model.prefill(params, batch, max_seq=S)
+    pad_logits = logits[:, cfg.vocab_size:]
+    assert bool((pad_logits < -1e20).all()), "padded vocab rows must be -inf"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_positive_and_plausible(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    assert n > 0
+    # coarse plausibility vs the names (e.g. llama3-8b within 2x of 8e9)
+    expectations = {
+        "llama3-8b": 8e9, "yi-9b": 8.8e9, "minitron-4b": 4e9,
+        "chatglm3-6b": 6e9, "whisper-medium": 0.76e9,
+        "deepseek-v2-lite-16b": 16e9, "xlstm-1.3b": 1.3e9,
+        "jamba-1.5-large-398b": 398e9,
+    }
+    if arch in expectations:
+        assert 0.5 * expectations[arch] < n < 2.2 * expectations[arch], \
+            f"{arch}: {n/1e9:.2f}B params vs expected {expectations[arch]/1e9}B"
+    if cfg.is_moe:
+        assert cfg.param_count(active_only=True) < n

@@ -1,0 +1,82 @@
+"""MoE routing/dispatch invariants (hypothesis property tests)."""
+
+import dataclasses
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config
+from repro.models.moe import (capacity_per_group, moe_einsum, moe_init,
+                              moe_sort_dispatch, route_topk)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@given(st.integers(2, 64), st.integers(1, 6), st.integers(1, 16))
+@settings(max_examples=30, deadline=None)
+def test_route_topk_invariants(e, k, t):
+    k = min(k, e)
+    w = jax.random.normal(KEY, (8, e), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(t), (t, 8), jnp.float32)
+    probs, experts, aux = route_topk(w, x, k)
+    assert probs.shape == (t, k) and experts.shape == (t, k)
+    # normalized, nonnegative, experts valid and distinct per token
+    np.testing.assert_allclose(np.asarray(probs).sum(-1), 1.0, atol=1e-5)
+    assert (np.asarray(probs) >= 0).all()
+    ex = np.asarray(experts)
+    assert ((ex >= 0) & (ex < e)).all()
+    for row in ex:
+        assert len(set(row.tolist())) == k
+    assert float(aux) >= 0.99  # E[e·f·p] ≥ 1 with equality at balance
+
+
+@given(st.integers(8, 4096), st.integers(2, 64), st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_capacity_accommodates_balanced_load(g, e, k):
+    k = min(k, e)
+    c = capacity_per_group(g, e, k, 1.25)
+    assert c * e >= g * k            # total slots ≥ assignments
+    assert c % 4 == 0
+
+
+def test_einsum_vs_sort_dispatch_no_drop():
+    cfg = get_smoke_config("llama4-scout-17b-a16e")
+    cfg_big = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = moe_init(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model),
+                          jnp.float32)
+    out_e, aux_e = moe_einsum(params, cfg_big, x, group_size=64)
+    out_s, aux_s = moe_sort_dispatch(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_s),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(float(aux_e), float(aux_s), rtol=1e-5)
+
+
+def test_einsum_dispatch_drops_under_capacity_pressure():
+    """With capacity_factor ≪ 1 the GShard path drops tokens (residual
+    carries them) — outputs differ from dropless by design."""
+    cfg = dataclasses.replace(get_smoke_config("llama4-scout-17b-a16e"),
+                              capacity_factor=0.1)
+    params = moe_init(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, cfg.d_model),
+                          jnp.float32)
+    out_drop, _ = moe_einsum(params, cfg, x, group_size=64)
+    out_full, _ = moe_sort_dispatch(params, cfg, x)
+    # dropped rows are exactly zero in the MoE contribution (+ shared expert)
+    diff = np.abs(np.asarray(out_drop - out_full)).max()
+    assert diff > 1e-3
+
+
+def test_shared_expert_always_applies():
+    cfg = get_smoke_config("deepseek-v2-lite-16b")
+    assert cfg.num_shared_experts == 2
+    params = moe_init(KEY, cfg)
+    x = jnp.zeros((1, 8, cfg.d_model), jnp.float32)
+    out, _ = moe_einsum(params, cfg, x)
+    # zero input → zero output regardless of routing (sanity)
+    assert float(jnp.abs(out).max()) < 1e-5

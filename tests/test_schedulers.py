@@ -1,0 +1,171 @@
+"""Scheduler + simulated-runtime tests: the paper's quantitative claims."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (AdaptiveSim, BatchWork, CostModel, SeqWork,
+                        WorkStealingSim, WorkRange, adaptive, by_blocks,
+                        build_plan, demand_split, geometric_blocks,
+                        static_partition_sim, thief_splitting, wrap_iter,
+                        work_loop)
+
+
+# ---------------------------------------------------------------------------
+# by_blocks: geometric sizes + the wasted-work bound (paper §3.5)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 10_000_000), st.integers(1, 64))
+@settings(max_examples=60)
+def test_geometric_blocks_cover(total, first):
+    blocks = geometric_blocks(total, first=first)
+    pos = 0
+    for lo, hi in blocks:
+        assert lo == pos and hi > lo
+        pos = hi
+    assert pos == total
+    import math
+    assert len(blocks) <= math.ceil(math.log2(total / first + 1)) + 2
+
+
+@given(st.integers(10, 1_000_000), st.integers(1, 32),
+       st.integers(0, 1_000_000))
+@settings(max_examples=60)
+def test_by_blocks_wasted_work_bound(total, first, target):
+    """Items processed ≤ 2×(target+1) + first: wasted ≤ ~half (growth 2)."""
+    target = target % total
+    bb = by_blocks(first=first)
+
+    def block_fn(blk, carry):
+        return carry or (blk.start <= target < blk.stop)
+
+    carry, stats = bb.run(WorkRange(0, total), block_fn, False,
+                          should_stop=lambda c: c)
+    assert stats.stopped_early
+    assert stats.items_run <= 2 * (target + 1) + 2 * first
+
+
+def test_by_blocks_no_stop_runs_all():
+    bb = by_blocks(first=7)
+    _, stats = bb.run(WorkRange(0, 1000), lambda b, c: c, None)
+    assert stats.items_run == 1000 and not stats.stopped_early
+
+
+# ---------------------------------------------------------------------------
+# demand_split: the adaptive schedule's "tasks = steals + 1"
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 100_000), st.integers(1, 300))
+def test_demand_split_minimal_divisions(n, demand):
+    plan = demand_split(WorkRange(0, n), demand)
+    want = min(demand, n)
+    assert plan.num_tasks() == want
+    assert plan.divisions == want - 1          # minimal: tasks = divisions+1
+    leaves = sorted(plan.leaves(), key=lambda w: w.start)
+    assert leaves[0].start == 0 and leaves[-1].stop == n
+    sizes = plan.leaf_sizes()
+    if n >= 4 * demand:
+        assert max(sizes) <= 2 * max(1, min(sizes)) + 1  # largest-first halving
+
+
+# ---------------------------------------------------------------------------
+# Simulated work-stealing runtime: paper claims, bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16])
+def test_adaptive_tasks_equal_steals_plus_one(p):
+    sim = AdaptiveSim(p, CostModel(per_item=1.0), seed=0)
+    res = sim.run(WorkRange(0, 400_000))
+    assert res.tasks_created == res.steals_successful + 1
+    assert res.items_processed == 400_000
+    assert res.speedup_vs_serial > 0.7 * p
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+def test_thief_splitting_near_linear_speedup(p):
+    sim = WorkStealingSim(p, CostModel(per_item=1.0, split_overhead=1.0),
+                          seed=1)
+    res = sim.run(thief_splitting(WorkRange(0, 400_000), p=p))
+    assert res.items_processed == 400_000
+    assert res.speedup_vs_serial > 0.7 * p
+    # far fewer tasks than items (the whole point vs naive Ω(n)); tail
+    # fragmentation inflates the count (the paper's "might be higher" case)
+    assert res.tasks_created < res.items_total // 100
+
+
+def test_adaptive_fewer_tasks_than_thief():
+    """Paper §3.6: 'less tasks creations' vs counter-based splitting."""
+    cost = CostModel(per_item=1.0, split_overhead=5.0)
+    thief = WorkStealingSim(8, cost, seed=0).run(
+        thief_splitting(WorkRange(0, 200_000), p=8))
+    adapt = AdaptiveSim(8, cost, seed=0).run(WorkRange(0, 200_000))
+    assert adapt.tasks_created < thief.tasks_created
+
+
+def test_expensive_splits_favor_adaptive():
+    """fannkuch structure: divide_at is expensive → adaptive wins makespan."""
+    def split_cost(work):
+        return 400.0                       # first-permutation generation
+    cost = CostModel(per_item=1.0, split_cost_fn=split_cost)
+    n = 100_000
+    static = static_partition_sim(WorkRange(0, n), 8, cost, num_blocks=64)
+    adapt = AdaptiveSim(8, CostModel(per_item=1.0), seed=0).run(
+        WorkRange(0, n))
+    assert adapt.makespan < static.makespan
+
+
+def test_heterogeneous_workers_load_balance():
+    """Work stealing absorbs a 2× straggler; static partitioning doesn't."""
+    speeds = [1.0] * 7 + [0.5]
+    cost = CostModel(per_item=1.0)
+    ws = WorkStealingSim(8, cost, seed=0, speeds=speeds).run(
+        thief_splitting(WorkRange(0, 200_000), p=8))
+    static = static_partition_sim(WorkRange(0, 200_000), 8, cost,
+                                  speeds=speeds, num_blocks=8)
+    assert ws.makespan < 0.8 * static.makespan
+
+
+def test_depjoin_no_slower_than_join():
+    cost = CostModel(per_item=1.0, reduce_cost=50.0)
+    join = WorkStealingSim(4, cost, depjoin=False, seed=2).run(
+        thief_splitting(WorkRange(0, 50_000), p=4))
+    dep = WorkStealingSim(4, cost, depjoin=True, seed=2).run(
+        thief_splitting(WorkRange(0, 50_000), p=4))
+    assert dep.makespan <= join.makespan * 1.3
+    assert dep.items_processed == join.items_processed == 50_000
+
+
+# ---------------------------------------------------------------------------
+# wrap_iter / work_loop (paper §3.4, §3.6.1)
+# ---------------------------------------------------------------------------
+
+def test_wrap_iter_map_reduce_sum():
+    import math
+    w = thief_splitting(WorkRange(0, 1000), p=4)
+    total = wrap_iter(w).map_reduce(
+        lambda leaf: sum(leaf.indices()), lambda a, b: a + b)
+    assert total == sum(range(1000))
+
+
+def test_work_loop_geometric_grants():
+    import jax.numpy as jnp
+
+    def advance(state, n):
+        import jax
+        return jax.lax.fori_loop(0, n, lambda i, s: s + 1, state)
+
+    out = work_loop(jnp.int32(0), advance, total=1000, first_grant=1)
+    assert int(out) == 1000
+
+
+def test_work_loop_early_stop():
+    import jax
+    import jax.numpy as jnp
+
+    def advance(state, n):
+        return jax.lax.fori_loop(0, n, lambda i, s: s + 1, state)
+
+    out = work_loop(jnp.int32(0), advance, total=1 << 20,
+                    should_stop=lambda s: s >= 100, first_grant=1)
+    # stops at a grant boundary after crossing 100 → ≤ next power of two
+    assert 100 <= int(out) <= 256

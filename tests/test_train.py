@@ -1,0 +1,251 @@
+"""Training-stack tests: checkpoint atomicity/restore, resume determinism,
+straggler rebalancing, elastic re-meshing, data-pipeline reproducibility."""
+
+import dataclasses
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, init_state
+from repro.train.checkpoint import CheckpointManager, config_fingerprint
+from repro.train.elastic import choose_mesh
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.step import TrainState, make_train_step, microbatch_plan
+from repro.train.straggler import (AdaptiveRebalancer, StragglerDetector,
+                                   TelemetryBuffer)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=8, seed=7)
+    p1 = DataPipeline(cfg)
+    batches1 = [p1.next_batch() for _ in range(5)]
+    # resume from step 3
+    p2 = DataPipeline(cfg)
+    p2.state.step = 3
+    b3 = p2.next_batch()
+    np.testing.assert_array_equal(b3["tokens"], batches1[3]["tokens"])
+
+
+def test_pipeline_shard_slices_consistent():
+    """Any shard [lo,hi) equals those rows of the full batch — replicas can
+    regenerate any other replica's data (elastic recovery property)."""
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=32, seed=3)
+    p = DataPipeline(cfg)
+    full = p.batch_slice(11, 0, 32)
+    part = p.batch_slice(11, 8, 20)
+    np.testing.assert_array_equal(part["tokens"], full["tokens"][8:20])
+
+
+def test_pipeline_shard_plan_shares():
+    cfg = DataConfig(vocab_size=100, seq_len=4, global_batch=64)
+    p = DataPipeline(cfg)
+    eq = p.shard_plan(4)
+    assert [hi - lo for lo, hi in eq] == [16, 16, 16, 16]
+    weighted = p.shard_plan(4, shares=[0.4, 0.3, 0.2, 0.1])
+    sizes = [hi - lo for lo, hi in weighted]
+    assert sum(sizes) == 64 and sizes[0] > sizes[-1]
+    # coverage without overlap
+    pos = 0
+    for lo, hi in weighted:
+        assert lo == pos
+        pos = hi
+    assert pos == 64
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tiny_state():
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    opt_cfg = AdamWConfig()
+    params = model.init(KEY)
+    return cfg, model, opt_cfg, TrainState(params=params,
+                                           opt=init_state(opt_cfg, params))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, model, opt_cfg, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path), fingerprint="abc")
+    mgr.save(7, state, extra={"data_step": 3}, blocking=True)
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored, extra = mgr.restore(abstract)
+    assert extra["data_step"] == 3
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity_incomplete_dirs_ignored(tmp_path):
+    cfg, model, opt_cfg, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state, blocking=True)
+    # simulate a crash mid-save: stray tmp dir
+    bad = tmp_path / "step_00000002.tmp-999"
+    bad.mkdir()
+    (bad / "arr_00000.npy").write_bytes(b"garbage")
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert mgr2.latest_step() == 1
+    assert not bad.exists()          # gc'd on restart
+
+
+def test_checkpoint_keep_k(tmp_path):
+    cfg, model, opt_cfg, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state, blocking=True)
+    assert mgr.steps() == [3, 4]
+
+
+def test_checkpoint_fingerprint_mismatch(tmp_path):
+    cfg, model, opt_cfg, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path), fingerprint="aaa")
+    mgr.save(1, state, blocking=True)
+    mgr2 = CheckpointManager(str(tmp_path), fingerprint="bbb")
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    with pytest.raises(ValueError):
+        mgr2.restore(abstract)
+
+
+def test_checkpoint_async(tmp_path):
+    cfg, model, opt_cfg, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, state, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+# ---------------------------------------------------------------------------
+# trainer: resume == uninterrupted (bitwise loss trajectory)
+# ---------------------------------------------------------------------------
+
+def test_train_resume_matches_uninterrupted(tmp_path):
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=2)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=4, seed=5)
+
+    def run(total, ckpt_dir, resume=False):
+        t = Trainer(model, opt_cfg, data_cfg,
+                    LoopConfig(total_steps=total, ckpt_every=3,
+                               ckpt_dir=str(ckpt_dir), log_every=100))
+        state = t.run()
+        return t, state
+
+    # uninterrupted 6 steps
+    t_a, state_a = run(6, tmp_path / "a")
+    # interrupted at 3 then resumed to 6
+    t_b1, _ = run(3, tmp_path / "b")
+    t_b2, state_b = run(6, tmp_path / "b")
+    la = jax.tree.leaves(state_a.params)
+    lb = jax.tree.leaves(state_b.params)
+    for a, b in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_trainer_preemption_checkpoints(tmp_path):
+    cfg = get_smoke_config("minitron-4b")
+    model = Model(cfg)
+    opt_cfg = AdamWConfig()
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=8,
+                          global_batch=2)
+    t = Trainer(model, opt_cfg, data_cfg,
+                LoopConfig(total_steps=50, ckpt_every=100,
+                           ckpt_dir=str(tmp_path), log_every=100))
+    state = t.init_or_restore()
+    t._preempted = True              # simulate SIGTERM
+    t.run(state)
+    assert t.ckpt.latest_step() is not None
+
+
+# ---------------------------------------------------------------------------
+# straggler mitigation (the adaptive scheduler at cluster level)
+# ---------------------------------------------------------------------------
+
+def test_rebalancer_moves_share_from_straggler():
+    tel = TelemetryBuffer(4)
+    reb = AdaptiveRebalancer(4, first_window=1)
+    shares = None
+    for step in range(8):
+        tel.record_all([1.0, 1.0, 1.0, 2.5])   # replica 3 is slow
+        s = reb.maybe_rebalance(tel)
+        shares = s if s is not None else shares
+    assert shares is not None
+    assert shares[3] < 0.25 < max(shares[:3])
+    assert abs(sum(shares) - 1.0) < 1e-9
+    assert reb.steals >= 1
+
+
+def test_rebalancer_window_grows_when_balanced():
+    tel = TelemetryBuffer(4)
+    reb = AdaptiveRebalancer(4, first_window=2)
+    for _ in range(32):
+        tel.record_all([1.0, 1.0, 1.0, 1.0])
+        assert reb.maybe_rebalance(tel) is None
+    assert reb.window > 2            # geometric growth, no steals
+    assert reb.steals == 0
+
+
+def test_straggler_detector_eviction():
+    tel = TelemetryBuffer(4)
+    det = StragglerDetector(threshold=1.5, patience=3)
+    evicted = None
+    for _ in range(5):
+        tel.record_all([1.0, 1.0, 1.0, 5.0])
+        evicted = det.check(tel) or evicted
+    assert evicted == 3
+
+
+# ---------------------------------------------------------------------------
+# elastic re-meshing
+# ---------------------------------------------------------------------------
+
+def test_choose_mesh_factorization():
+    import numpy as _np
+    devs = (jax.devices() * 8)[:8]
+    m = choose_mesh(8, prefer_model=4, devices=devs)
+    assert m.shape["model"] == 4 and m.size == 8
+    m2 = choose_mesh(6, prefer_model=4, devices=devs[:6])
+    assert m2.shape["model"] == 3 and m2.size == 6
+
+
+def test_elastic_restore_across_mesh_change(tmp_path):
+    """Save under one 'mesh', restore under another device layout."""
+    cfg, model, opt_cfg, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state, blocking=True)
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored, _ = mgr.restore(abstract, shardings=None)  # host → new devices
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# microbatch planning (the Kvik hook)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gb,dp,tokens", [(256, 16, 4096), (32, 16, 32768),
+                                          (64, 4, 1024), (8, 8, 4096)])
+def test_microbatch_plan_divides(gb, dp, tokens):
+    n = microbatch_plan(gb, dp, tokens_per_seq=tokens)
+    assert gb % n == 0
+    assert (gb // n) % dp == 0
