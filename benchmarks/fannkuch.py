@@ -12,9 +12,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (AdaptiveSim, CostModel, PermRange, WorkRange,
-                        WorkStealingSim, static_partition_sim,
-                        thief_splitting, total_permutations)
+from repro.core import (AdaptivePolicy, CostModel, JoinPolicy, PermRange,
+                        Runtime, StaticPartitionPolicy, thief_splitting,
+                        total_permutations)
 
 from .common import emit
 
@@ -30,11 +30,12 @@ def run() -> None:
 
     for p in (4, 16, 64):
         work = lambda: PermRange(N_PERM, 0, total)
-        static8 = static_partition_sim(work(), p, cost, num_blocks=8 * p)
-        thief = WorkStealingSim(p, cost, seed=0).run(
+        static8 = Runtime(p, cost,
+                          StaticPartitionPolicy(num_blocks=8 * p)).run(work())
+        thief = Runtime(p, cost, JoinPolicy(), seed=0).run(
             thief_splitting(work(), p=p))
-        adapt = AdaptiveSim(p, CostModel(per_item=1.0, steal_latency=2.0),
-                            seed=0).run(work())
+        adapt = Runtime(p, CostModel(per_item=1.0, steal_latency=2.0),
+                        AdaptivePolicy(), seed=0).run(work())
         for name, res in (("static8", static8), ("thief", thief),
                           ("adaptive", adapt)):
             emit(f"fannkuch/p{p}/{name}", res.makespan,
@@ -46,10 +47,10 @@ def run() -> None:
     # paper attributes the omp-static drops to
     p = 16
     speeds = [1.0] * (p - 1) + [0.5]
-    static = static_partition_sim(PermRange(N_PERM, 0, total), p, cost,
-                                  speeds=speeds, num_blocks=8 * p)
-    adapt = AdaptiveSim(p, CostModel(per_item=1.0, steal_latency=2.0),
-                        seed=0, speeds=speeds).run(
+    static = Runtime(p, cost, StaticPartitionPolicy(num_blocks=8 * p),
+                     speeds=speeds).run(PermRange(N_PERM, 0, total))
+    adapt = Runtime(p, CostModel(per_item=1.0, steal_latency=2.0),
+                    AdaptivePolicy(), seed=0, speeds=speeds).run(
         PermRange(N_PERM, 0, total))
     emit("fannkuch/straggler/static8", static.makespan,
          f"speedup={static.speedup_vs_serial:.2f}")

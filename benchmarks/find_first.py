@@ -13,8 +13,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (AdaptiveSim, CostModel, WorkRange, WorkStealingSim,
-                        by_blocks, geometric_blocks, thief_splitting)
+from repro.core import (AdaptivePolicy, ByBlocksPolicy, CostModel, JoinPolicy,
+                        Runtime, WorkRange, by_blocks, thief_splitting)
 
 from .common import emit, time_fn
 
@@ -23,33 +23,34 @@ N = 1_000_000
 
 def _sim_find_first(scheduler: str, blocks: bool, target: int, p: int = 16,
                     seed: int = 0):
+    """One unified-runtime run per configuration.  With ``blocks`` the outer
+    by_blocks loop and the inner scheduler are *composed policies* on the
+    same engine — previously this required a hand-rolled loop over separate
+    per-block simulator instances."""
     cost = CostModel(per_item=1.0, steal_latency=2.0, check_overhead=0.05)
 
-    def hit_leaf(work):          # join-sim predicate: sees leaf Divisibles
+    def hit_leaf(work):          # join predicate: sees leaf Divisibles
         if work.start <= target < work.stop:
             return target
         return None
 
-    def hit_item(item):          # adaptive-sim predicate: sees items
+    def hit_item(item):          # adaptive predicate: sees items
         return target if item == target else None
 
-    total_time = 0.0
-    items = 0
-    bounds = (geometric_blocks(N, first=p) if blocks else [(0, N)])
-    for (lo, hi) in bounds:
-        w = WorkRange(lo, hi)
-        if scheduler == "adaptive":
-            res = AdaptiveSim(p, cost, seed=seed,
-                              stop_predicate=hit_item).run(w)
+    wrap = None
+    if scheduler == "adaptive":
+        inner, pred = AdaptivePolicy(), hit_item
+        work = WorkRange(0, N)
+    else:
+        inner, pred = JoinPolicy(), hit_leaf
+        if blocks:
+            work, wrap = WorkRange(0, N), lambda b: thief_splitting(b, p=p)
         else:
-            res = WorkStealingSim(p, cost, seed=seed,
-                                  stop_predicate=hit_leaf).run(
-                thief_splitting(w, p=p))
-        total_time += res.makespan
-        items += res.items_processed
-        if res.stopped_early:
-            break
-    return total_time, items
+            work = thief_splitting(WorkRange(0, N), p=p)
+    policy = (ByBlocksPolicy(inner=inner, first=p, wrap=wrap)
+              if blocks else inner)
+    res = Runtime(p, cost, policy, seed=seed, stop_predicate=pred).run(work)
+    return res.makespan, res.items_processed
 
 
 def run() -> None:

@@ -3,12 +3,15 @@
 * thief_splitting, balanced work, p a power of two → O(p) tasks;
 * adaptive → tasks = successful steals + 1 (measured identity);
 * naive full division → Ω(n) tasks (the baseline both improve on).
+
+All dynamic numbers come from the one unified :class:`repro.core.Runtime`
+with the policy swapped — the same engine, so counts are comparable.
 """
 
 from __future__ import annotations
 
-from repro.core import (AdaptiveSim, CostModel, WorkRange, WorkStealingSim,
-                        bound_depth, build_plan, thief_splitting)
+from repro.core import (AdaptivePolicy, CostModel, JoinPolicy, Runtime,
+                        WorkRange, build_plan, thief_splitting)
 
 from .common import emit
 
@@ -22,9 +25,9 @@ def run() -> None:
 
     for p in (2, 4, 8, 16, 32):
         cost = CostModel(per_item=1.0)
-        thief = WorkStealingSim(p, cost, seed=0).run(
+        thief = Runtime(p, cost, JoinPolicy(), seed=0).run(
             thief_splitting(WorkRange(0, N), p=p))
-        adapt = AdaptiveSim(p, cost, seed=0).run(WorkRange(0, N))
+        adapt = Runtime(p, cost, AdaptivePolicy(), seed=0).run(WorkRange(0, N))
         emit(f"task_counts/p{p}/thief", thief.makespan,
              f"tasks={thief.tasks_created} tasks_per_p="
              f"{thief.tasks_created/p:.1f}")

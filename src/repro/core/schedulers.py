@@ -6,8 +6,14 @@ Four schedulers, mirroring Kvik:
   Statically: builds a :class:`~repro.core.plan.Plan` and emits a symmetric
   reduction tree at trace time.
 * ``depjoin``              — same division tree; the "reduce by last finisher"
-  optimization only exists dynamically, so it is a mode of the simulated
-  runtime (``repro.core.simruntime``), where its benefit is measured.
+  optimization only exists dynamically, so it is a policy of the unified
+  virtual-time runtime (``repro.core.runtime`` + ``repro.core.policies``),
+  where its benefit is measured — reachable via ``simulate(depjoin=True)``.
+
+Each scheduler has two faces: the *static* ``plan``/``schedule`` face
+(division recorded at trace time, parameterizing compiled programs) and a
+*dynamic* ``simulate(work, p, cost)`` face running the same policy on the
+unified discrete-event runtime.
 * :class:`ByBlocks`        — a *sequential* outer loop over *parallel* blocks
   of geometrically growing size (paper §3.5).  This is the scheduler for
   interruptible computations: chunked prefill, early-exit decode, all-finite
@@ -25,6 +31,9 @@ from typing import Any, Callable, Iterator, List, Optional, Tuple
 from .adaptors import Adaptor, StealContext
 from .divisible import Divisible
 from .plan import Plan, build_plan, demand_split, geometric_blocks
+from .policies import (AdaptivePolicy, ByBlocksPolicy, DepJoinPolicy,
+                       JoinPolicy, SchedulingPolicy)
+from .runtime import CostModel, Runtime, SimResult
 
 
 # ---------------------------------------------------------------------------
@@ -47,6 +56,15 @@ class JoinScheduler:
     def schedule(self, work: Divisible, map_fn: Callable[[Divisible], Any],
                  reduce_fn: Callable[[Any, Any], Any]) -> Any:
         return self.plan(work).map_reduce(map_fn, reduce_fn)
+
+    def simulate(self, work: Divisible, p: int, cost: CostModel, *,
+                 depjoin: bool = False, seed: int = 0, speeds=None,
+                 stop_predicate=None) -> SimResult:
+        """Dynamic face: run this schedule on the unified virtual-time
+        runtime (``depjoin=True`` → reduce-by-last-finisher, paper §3.2)."""
+        policy = DepJoinPolicy() if depjoin else JoinPolicy()
+        return Runtime(p, cost, policy, seed=seed, speeds=speeds,
+                       stop_predicate=stop_predicate).run(work)
 
 
 def schedule_join(work: Divisible, map_fn, reduce_fn, *,
@@ -127,6 +145,19 @@ class ByBlocks:
                 break
         return carry, stats
 
+    def simulate(self, work: Divisible, p: int, cost: CostModel, *,
+                 inner: Optional[SchedulingPolicy] = None, seed: int = 0,
+                 speeds=None, stop_predicate=None) -> SimResult:
+        """Dynamic face: sequential outer loop of geometric blocks on the
+        unified runtime, each block a parallel region under ``inner``
+        (default join).  Composition the old engines could not express:
+        pass ``inner=AdaptivePolicy()`` for interruptible adaptive blocks."""
+        policy = ByBlocksPolicy(inner=inner or JoinPolicy(), first=self.first,
+                                growth=self.growth, align=self.align,
+                                cap=self.cap)
+        return Runtime(p, cost, policy, seed=seed, speeds=speeds,
+                       stop_predicate=stop_predicate).run(work)
+
 
 def by_blocks(first: int, growth: float = 2.0, **kw) -> ByBlocks:
     return ByBlocks(first=first, growth=growth, **kw)
@@ -145,8 +176,9 @@ class AdaptiveScheduler:
     leaves from demand−1 divisions — "tasks created = successful steals + 1".
 
     The *dynamic* adaptive scheduler — geometric nano-loops, interruption
-    checks, steal-driven splits — lives in :mod:`repro.core.simruntime`
-    (virtual time) and in the between-steps rebalancer
+    checks, steal-driven splits — is :class:`~repro.core.policies.
+    AdaptivePolicy` on the unified runtime (see :meth:`simulate`) and the
+    between-steps rebalancer
     (:mod:`repro.train.straggler`) where real dynamism exists at cluster scale.
     """
 
@@ -157,6 +189,15 @@ class AdaptiveScheduler:
 
     def schedule(self, work: Divisible, map_fn, reduce_fn) -> Any:
         return self.plan(work).map_reduce(map_fn, reduce_fn)
+
+    def simulate(self, work: Divisible, p: Optional[int], cost: CostModel, *,
+                 nano0: int = 1, seed: int = 0, speeds=None,
+                 stop_predicate=None) -> SimResult:
+        """Dynamic face: the steal-driven nano/micro-loop behaviour on the
+        unified runtime (``p`` defaults to this scheduler's demand)."""
+        return Runtime(p or self.demand, cost, AdaptivePolicy(nano0=nano0),
+                       seed=seed, speeds=speeds,
+                       stop_predicate=stop_predicate).run(work)
 
 
 def adaptive(demand: int) -> AdaptiveScheduler:

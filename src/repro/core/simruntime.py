@@ -1,136 +1,32 @@
-"""A deterministic virtual-time work-stealing runtime.
+"""Deprecation shims over the unified scheduling runtime.
 
-Why this exists: the paper's dynamic claims (task counts under
-thief_splitting, "tasks = successful steals + 1" for the adaptive scheduler,
-depjoin's no-wait reductions, fannkuch's split-cost sensitivity) are about a
-*work-stealing execution engine*.  A statically-compiled TPU program has no
-such engine, and this 1-core container could not exhibit real parallelism
-anyway.  So we validate those claims bit-exactly on a discrete-event simulator
-with p virtual workers, seeded victim selection, and explicit cost models —
-then carry the *validated policies* into the static/replan world of the rest
-of the framework.
+The three engines that used to live here — ``WorkStealingSim`` (join /
+depjoin), ``AdaptiveSim``, and ``static_partition_sim`` — are now ~50-line
+policies (:mod:`repro.core.policies`) over one shared discrete-event engine
+(:mod:`repro.core.runtime`).  These shims keep the historical constructor
+signatures and produce **bit-identical** :class:`~repro.core.runtime.
+SimResult` values under fixed seeds (pinned by ``tests/test_runtime.py``'s
+golden table), so existing callers and the paper-claim tests keep passing.
 
-Semantics follow Rayon/Kvik:
-
-* join mode — executing a task first consults the policy; division pushes the
-  right child to the worker's own deque (stealable) and continues with the
-  left.  Leaves run sequentially for ``cost_fn(work)`` virtual seconds.
-  Idle workers steal from the *top* of a random victim's deque.
-* reductions — plain ``join``: the reduction is owned by the worker that
-  divided; it runs it when it next becomes idle.  ``depjoin``: the worker that
-  completes the *second* child runs the reduction immediately (paper §3.2).
-* adaptive mode — a single initial task; the executing worker folds in
-  geometrically growing nano-loops (1, 2, 4, ...), checking a steal-request
-  mailbox between loops; a pending request splits the *remaining* work in half
-  and hands it to the thief directly; nano size resets (paper §2.2/§3.6).
-* heterogeneous workers — per-worker speed factors (straggler studies,
-  fannkuch's load imbalance).
-* interruptible work — a global flag set by a predicate on processed items;
-  join-mode tasks only check it before starting (classical schedulers can only
-  cancel non-started tasks — paper §4.1); adaptive tasks also check at
-  nano-loop boundaries.
+New code should use :class:`~repro.core.runtime.Runtime` with an explicit
+policy (or the schedulers' ``simulate`` faces), which additionally allows
+compositions these shims never could: ``by_blocks`` outer loops over
+adaptive inner blocks, adaptor-wrapped adaptive tasks, depjoin under
+by_blocks, and so on.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import random
-from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, List, Optional
 
-from .adaptors import Adaptor, StealContext
 from .divisible import Divisible
-
-
-# ---------------------------------------------------------------------------
-# Cost model
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class CostModel:
-    """Virtual-time costs.
-
-    ``per_item``      — sequential cost per work item.
-    ``split_overhead``— fixed cost of one division (task creation).
-    ``split_cost_fn`` — extra, work-dependent division cost (e.g. fannkuch's
-                        first-permutation generation, merge sort's binary
-                        search); receives the divided work.
-    ``reduce_cost``   — cost of one reduction.
-    ``check_overhead``— cost of one steal-request check (the reason nano-loops
-                        exist at all).
-    ``steal_latency`` — time for a steal attempt (success or failure).
-    """
-
-    per_item: float = 1.0
-    split_overhead: float = 1.0
-    split_cost_fn: Optional[Callable[[Divisible], float]] = None
-    reduce_cost: float = 0.0
-    check_overhead: float = 0.05
-    steal_latency: float = 0.5
-
-    def split_cost(self, work: Divisible) -> float:
-        extra = 0.0
-        if self.split_cost_fn is not None:
-            extra = self.split_cost_fn(work)
-        else:
-            u = work.unwrap() if isinstance(work, Adaptor) else work
-            extra = float(getattr(u, "split_cost", 0.0))
-        return self.split_overhead + extra
-
-
-@dataclasses.dataclass
-class SimResult:
-    makespan: float
-    tasks_created: int           # leaves actually executed as separate tasks
-    divisions: int
-    steals_attempted: int
-    steals_successful: int
-    reductions: int
-    items_processed: int
-    items_total: int
-    per_worker_busy: List[float]
-    stopped_early: bool = False
-
-    @property
-    def speedup_vs_serial(self) -> float:
-        serial = self.items_total  # with per_item=1
-        return serial / self.makespan if self.makespan > 0 else 0.0
-
-    @property
-    def wasted_items(self) -> int:
-        return 0  # overwritten by interruptible runs via dataclasses.replace
-
-    @property
-    def load_balance(self) -> float:
-        b = self.per_worker_busy
-        return (min(b) / max(b)) if max(b) > 0 else 1.0
-
-
-# ---------------------------------------------------------------------------
-# Join-mode simulation
-# ---------------------------------------------------------------------------
-
-class _JoinNode:
-    __slots__ = ("pending", "owner", "parent", "reduce_ready")
-
-    def __init__(self, owner: int, parent: Optional["_JoinNode"]):
-        self.pending = 2
-        self.owner = owner
-        self.parent = parent
-        self.reduce_ready = False
-
-
-@dataclasses.dataclass
-class _Task:
-    work: Divisible
-    parent: Optional[_JoinNode]
-    creator: int
-    stolen: bool = False
+from .policies import (AdaptivePolicy, DepJoinPolicy, JoinPolicy,
+                       StaticPartitionPolicy)
+from .runtime import CostModel, Runtime, SimResult
 
 
 class WorkStealingSim:
-    """Discrete-event work-stealing simulator (join / depjoin modes)."""
+    """Deprecated shim: join/depjoin work stealing on the unified Runtime."""
 
     def __init__(self, p: int, cost: CostModel, *, depjoin: bool = False,
                  seed: int = 0, speeds: Optional[List[float]] = None,
@@ -138,296 +34,38 @@ class WorkStealingSim:
         self.p = p
         self.cost = cost
         self.depjoin = depjoin
-        self.rng = random.Random(seed)
-        self.speeds = speeds or [1.0] * p
-        assert len(self.speeds) == p
-        self.stop_predicate = stop_predicate
+        policy = DepJoinPolicy() if depjoin else JoinPolicy()
+        self._rt = Runtime(p, cost, policy, seed=seed, speeds=speeds,
+                           stop_predicate=stop_predicate)
 
     def run(self, work: Divisible) -> SimResult:
-        p, cost = self.p, self.cost
-        time = [0.0] * p
-        busy = [0.0] * p
-        deques: List[deque] = [deque() for _ in range(p)]
-        pending_reductions: List[List[_JoinNode]] = [[] for _ in range(p)]
-        current: List[Optional[_Task]] = [None] * p
-        items_total = work.size()
-        stats = dict(tasks=0, divisions=0, steal_try=0, steal_ok=0,
-                     reductions=0, items=0)
-        stop_flag = [False]
-        outstanding = [1]  # live leaf tasks + queued work
+        return self._rt.run(work)
 
-        current[0] = _Task(work=work, parent=None, creator=0)
-
-        def policy_divide(w: Divisible, ctx: StealContext) -> bool:
-            if isinstance(w, Adaptor):
-                return w.should_divide(ctx)
-            return w.should_be_divided()
-
-        def finish_join(node: Optional[_JoinNode], wid: int) -> None:
-            while node is not None:
-                node.pending -= 1
-                if node.pending > 0:
-                    return
-                # both children complete → reduction
-                if self.depjoin:
-                    time[wid] += cost.reduce_cost / self.speeds[wid]
-                    busy[wid] += cost.reduce_cost / self.speeds[wid]
-                    stats["reductions"] += 1
-                    node = node.parent
-                else:
-                    node.reduce_ready = True
-                    pending_reductions[node.owner].append(node)
-                    return
-
-        # Discrete-event loop: always advance the earliest-time worker.
-        idle_spin = 0
-        while True:
-            wid = min(range(p), key=lambda i: time[i])
-            t = time[wid]
-
-            task = current[wid]
-            if task is not None:
-                # divide until the policy says stop
-                ctx = StealContext(stolen=task.stolen, worker=wid,
-                                   demand=sum(1 for c in current if c is None))
-                w = task.work
-                while policy_divide(w, ctx):
-                    sc = cost.split_cost(w) / self.speeds[wid]
-                    time[wid] += sc
-                    busy[wid] += sc
-                    l, r = (w.divide_ctx(ctx) if hasattr(w, "divide_ctx")
-                            else w.divide())
-                    stats["divisions"] += 1
-                    node = _JoinNode(owner=wid, parent=task.parent)
-                    deques[wid].append(_Task(work=r, parent=node, creator=wid))
-                    outstanding[0] += 1
-                    task = _Task(work=l, parent=node, creator=wid,
-                                 stolen=False)
-                    w = task.work
-                    ctx = StealContext(stolen=False, worker=wid,
-                                       demand=sum(1 for c in current if c is None))
-                # run leaf sequentially
-                stats["tasks"] += 1
-                n_items = w.size()
-                if stop_flag[0]:
-                    n_items = 0  # cancelled before start
-                run_t = (n_items * cost.per_item) / self.speeds[wid]
-                time[wid] += run_t
-                busy[wid] += run_t
-                stats["items"] += n_items
-                if self.stop_predicate is not None and n_items > 0:
-                    hit = self.stop_predicate(
-                        w.unwrap() if isinstance(w, Adaptor) else w)
-                    if hit is not None:
-                        stop_flag[0] = True
-                if isinstance(w, Adaptor):
-                    w.on_finish()
-                current[wid] = None
-                outstanding[0] -= 1
-                finish_join(task.parent, wid)
-                continue
-
-            # idle: pending reductions first (plain join semantics)
-            if pending_reductions[wid]:
-                node = pending_reductions[wid].pop()
-                rt = cost.reduce_cost / self.speeds[wid]
-                time[wid] += rt
-                busy[wid] += rt
-                stats["reductions"] += 1
-                finish_join(node.parent, wid)
-                continue
-
-            # own deque
-            if deques[wid]:
-                current[wid] = deques[wid].pop()
-                continue
-
-            # steal
-            victims = [i for i in range(p) if i != wid and deques[i]]
-            if victims:
-                stats["steal_try"] += 1
-                v = self.rng.choice(victims)
-                time[wid] += cost.steal_latency / self.speeds[wid]
-                if deques[v]:
-                    stolen = deques[v].popleft()
-                    stolen.stolen = True
-                    if isinstance(stolen.work, Adaptor):
-                        stolen.work.on_steal()
-                    stats["steal_ok"] += 1
-                    current[wid] = stolen
-                continue
-
-            # nothing to do anywhere?
-            if outstanding[0] <= 0 and not any(pending_reductions[i] for i in range(p)):
-                break
-            # wait: jump to the next busy worker's time
-            others = [time[i] for i in range(p) if i != wid and
-                      (current[i] is not None or deques[i] or pending_reductions[i])]
-            if not others:
-                idle_spin += 1
-                if idle_spin > 10 * p:
-                    break
-                time[wid] += cost.steal_latency
-                continue
-            idle_spin = 0
-            time[wid] = max(time[wid], min(others)) + 1e-9
-
-        return SimResult(
-            makespan=max(time), tasks_created=stats["tasks"],
-            divisions=stats["divisions"], steals_attempted=stats["steal_try"],
-            steals_successful=stats["steal_ok"], reductions=stats["reductions"],
-            items_processed=stats["items"], items_total=items_total,
-            per_worker_busy=busy, stopped_early=stop_flag[0])
-
-
-# ---------------------------------------------------------------------------
-# Adaptive-mode simulation (paper §2.2 / §3.6)
-# ---------------------------------------------------------------------------
 
 class AdaptiveSim:
-    """Steal-driven splitting with geometric nano-loops.
-
-    One initial task; idle workers post steal *requests* to a random busy
-    worker's mailbox; the victim serves the request at its next micro-loop
-    boundary by dividing the remaining work in half.  Nano size starts at
-    ``nano0`` and doubles per un-stolen micro-loop, resetting on split.
-    """
+    """Deprecated shim: steal-driven adaptive splitting on the unified
+    Runtime.  The old per-victim ``mailbox`` (which nothing ever posted to)
+    is gone — steal requests live in the engine's single request queue."""
 
     def __init__(self, p: int, cost: CostModel, *, seed: int = 0,
                  speeds: Optional[List[float]] = None, nano0: int = 1,
                  stop_predicate: Optional[Callable[[Any], Optional[int]]] = None):
         self.p = p
         self.cost = cost
-        self.rng = random.Random(seed)
-        self.speeds = speeds or [1.0] * p
-        self.stop_predicate = stop_predicate
-        self.nano0 = nano0
+        self._rt = Runtime(p, cost, AdaptivePolicy(nano0=nano0), seed=seed,
+                           speeds=speeds, stop_predicate=stop_predicate)
 
     def run(self, work: Divisible) -> SimResult:
-        p, cost = self.p, self.cost
-        time = [0.0] * p
-        busy = [0.0] * p
-        # each busy worker holds (work, nano_size); mailbox[w] = list of thief ids
-        holding: List[Optional[list]] = [None] * p
-        mailbox: List[List[int]] = [[] for _ in range(p)]
-        waiting: Dict[int, float] = {}  # thief id -> since
-        items_total = work.size()
-        stats = dict(tasks=1, divisions=0, steal_try=0, steal_ok=0,
-                     reductions=0, items=0)
-        stop_flag = [False]
-        holding[0] = [work, self.nano0]
+        return self._rt.run(work)
 
-        def busy_workers():
-            return [i for i in range(p) if holding[i] is not None]
-
-        while True:
-            active = busy_workers()
-            if not active:
-                break
-            # advance the earliest active worker by one micro-loop
-            wid = min(active, key=lambda i: time[i])
-            slot = holding[wid]
-            w, nano = slot
-            remaining = w.size()
-            if remaining == 0 or stop_flag[0]:
-                holding[wid] = None
-                if isinstance(w, Adaptor):
-                    w.on_finish()
-                continue
-            grant = min(nano, remaining)
-            run_t = (grant * cost.per_item + cost.check_overhead) / self.speeds[wid]
-            # consume `grant` items via partial_fold
-            hit = [None]
-
-            def fold(st, item):
-                if self.stop_predicate is not None:
-                    r = self.stop_predicate(item)
-                    if r is not None:
-                        hit[0] = r
-                return st
-
-            w.partial_fold(None, fold, grant)
-            time[wid] += run_t
-            busy[wid] += run_t
-            stats["items"] += grant
-            if hit[0] is not None:
-                stop_flag[0] = True
-                holding[wid] = None
-                continue
-            if w.size() == 0:
-                holding[wid] = None
-                continue
-            # micro-loop boundary: serve one pending steal request
-            served = False
-            # collect requests from idle workers (they request lazily here:
-            # any idle worker with time <= current boundary is a requester)
-            for thief in range(p):
-                if holding[thief] is None and thief != wid:
-                    if thief not in waiting:
-                        waiting[thief] = time[thief]
-                        stats["steal_try"] += 1
-            if mailbox[wid]:
-                thief = mailbox[wid].pop(0)
-            else:
-                idle = [i for i in waiting if holding[i] is None]
-                thief = self.rng.choice(idle) if idle else None
-            if thief is not None and w.size() > 1:
-                l, r = w.divide()
-                stats["divisions"] += 1
-                stats["steal_ok"] += 1
-                stats["tasks"] += 1
-                del waiting[thief]
-                lat = cost.steal_latency / self.speeds[thief]
-                time[thief] = max(time[thief], time[wid]) + lat
-                holding[thief] = [r, self.nano0]
-                holding[wid] = [l, self.nano0]
-                served = True
-            if not served:
-                slot[0] = w
-                slot[1] = min(nano * 2, 1 << 20)
-
-        # reductions: tasks-1 merges (tree), charged to the final makespan
-        stats["reductions"] = max(0, stats["tasks"] - 1)
-        mk = max(time) + stats["reductions"] * cost.reduce_cost / max(self.speeds)
-        return SimResult(
-            makespan=mk, tasks_created=stats["tasks"],
-            divisions=stats["divisions"], steals_attempted=stats["steal_try"],
-            steals_successful=stats["steal_ok"], reductions=stats["reductions"],
-            items_processed=stats["items"], items_total=items_total,
-            per_worker_busy=busy, stopped_early=stop_flag[0])
-
-
-# ---------------------------------------------------------------------------
-# Static partition executor (for "rust static"-style baselines)
-# ---------------------------------------------------------------------------
 
 def static_partition_sim(work: Divisible, p: int, cost: CostModel, *,
                          speeds: Optional[List[float]] = None,
                          num_blocks: Optional[int] = None) -> SimResult:
-    """OpenMP-static-style baseline: pre-split into ``num_blocks`` equal chunks
-    assigned round-robin; no stealing.  (fannkuch's "rust static" and the
-    naive find_first partitioning.)"""
-    speeds = speeds or [1.0] * p
-    num_blocks = num_blocks or p
-    items_total = work.size()
-    chunks: List[Divisible] = []
-    rest = work
-    for i in range(num_blocks - 1):
-        sz = rest.size() // (num_blocks - i)
-        l, rest = rest.divide_at(sz)
-        chunks.append(l)
-    chunks.append(rest)
-    time = [0.0] * p
-    split_cost = sum(cost.split_cost(work) for _ in range(num_blocks - 1))
-    for i, ch in enumerate(chunks):
-        wkr = i % p
-        time[wkr] += (ch.size() * cost.per_item) / speeds[wkr]
-    mk = max(time) + split_cost / max(speeds)
-    return SimResult(makespan=mk, tasks_created=num_blocks,
-                     divisions=num_blocks - 1, steals_attempted=0,
-                     steals_successful=0, reductions=num_blocks - 1,
-                     items_processed=items_total, items_total=items_total,
-                     per_worker_busy=list(time))
+    """Deprecated shim: OpenMP-static baseline on the unified Runtime."""
+    rt = Runtime(p, cost, StaticPartitionPolicy(num_blocks=num_blocks),
+                 speeds=speeds)
+    return rt.run(work)
 
 
 __all__ = ["CostModel", "SimResult", "WorkStealingSim", "AdaptiveSim",

