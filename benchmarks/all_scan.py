@@ -4,17 +4,26 @@ A production duty: verify a tensor stream has no NaN/Inf before committing a
 checkpoint.  The naive reduction scans everything; by_blocks aborts at the
 first offending block.  Variance-width (the paper's main observation for
 ``all``) is reported via min/max over target positions.
+
+Two views, same policy (the unified-runtime port):
+
+* real wall clock — the ``by_blocks`` scheduler executing numpy block scans;
+* virtual time — the same geometric-block policy as a ``ByBlocksPolicy`` on
+  the unified discrete-event ``Runtime`` (``simulate``), which predicts the
+  wasted-work distribution the real run then confirms.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import WorkRange, by_blocks
+from repro.core import (AdaptivePolicy, ByBlocksPolicy, CostModel, WorkRange,
+                        by_blocks, simulate)
 
 from .common import emit, time_fn
 
 N = 100_000_000
+SIM_N = 1_000_000          # virtual-time items (scale model, not wall clock)
 
 
 def run() -> None:
@@ -42,9 +51,10 @@ def run() -> None:
     # clean input: both do full work
     t_naive = time_fn(lambda: naive(data), iters=3)
     t_block = time_fn(lambda: blocked(data)[0], iters=3)
-    emit("all/clean/naive", t_naive, "result=True")
+    emit("all/clean/naive", t_naive, "result=True", n=N)
     emit("all/clean/by_blocks", t_block,
-         f"overhead={t_block/t_naive:.2f}x")
+         f"overhead={t_block/t_naive:.2f}x", n=N,
+         overhead_vs_naive=t_block / t_naive)
 
     # poisoned input at random positions: by_blocks aborts early
     times, works = [], []
@@ -58,5 +68,31 @@ def run() -> None:
         data[pos] = 1.0
     emit("all/poisoned/by_blocks", float(np.mean(times)),
          f"mean_work={np.mean(works):.2%} min={min(works):.2%} "
-         f"max={max(works):.2%}")
+         f"max={max(works):.2%}",
+         mean_work=float(np.mean(works)), min_work=float(min(works)),
+         max_work=float(max(works)))
     emit("all/poisoned/naive", t_naive, "work=100%")
+
+    # unified-runtime view: the same geometric by_blocks policy, virtual
+    # time, p workers running each block's items under an inner adaptive
+    # policy.  Predicted wasted-work fractions should bracket the measured
+    # ones above (same growth=2 geometric series → ≤ 50% overscan).
+    cost = CostModel(per_item=1.0, split_overhead=4.0)
+    for p in (1, 8):
+        fracs = []
+        srng = np.random.RandomState(2)
+        for _ in range(5):
+            bad_at = int(srng.randint(0, SIM_N))
+            res = simulate(
+                WorkRange(0, SIM_N),
+                ByBlocksPolicy(inner=AdaptivePolicy(), first=1 << 10), p,
+                cost, seed=0,
+                stop_predicate=lambda i, bad_at=bad_at:
+                    i if i == bad_at else None)
+            assert res.stopped_early
+            fracs.append(res.items_processed / res.items_total)
+        emit(f"all/sim_p{p}/by_blocks_policy", float(np.mean(fracs)) * 100,
+             f"mean_scan={np.mean(fracs):.2%} max={max(fracs):.2%} "
+             f"(unified Runtime, virtual time)",
+             p=p, mean_scan=float(np.mean(fracs)),
+             max_scan=float(max(fracs)))

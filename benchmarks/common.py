@@ -1,16 +1,53 @@
-"""Shared benchmark utilities: timing, CSV output."""
+"""Shared benchmark utilities: timing, CSV stdout rows, JSON trajectory files.
+
+Every ``emit`` call both prints a ``name,us_per_call,derived`` CSV row and
+records the row (plus any structured ``meta`` kwargs) in ``ROWS``;
+``write_json`` flushes the accumulated rows of one benchmark module to
+``results/bench/BENCH_<stem>.json`` so the perf trajectory is
+machine-readable (the CI job archives the directory).
+"""
 
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
-from typing import Callable, List, Tuple
+from pathlib import Path
+from typing import Any, Callable, Dict, List
 
-ROWS: List[Tuple[str, float, str]] = []
+ROWS: List[Dict[str, Any]] = []
+
+BENCH_DIR = Path(os.environ.get("BENCH_OUT", "results/bench"))
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    ROWS.append((name, us_per_call, derived))
+def emit(name: str, us_per_call: float, derived: str = "", **meta: Any) -> None:
+    row: Dict[str, Any] = {"name": name, "us_per_call": float(us_per_call),
+                           "derived": derived}
+    if meta:
+        row["meta"] = meta
+    ROWS.append(row)
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def reset() -> None:
+    ROWS.clear()
+
+
+def write_json(stem: str) -> Path:
+    """Flush ``ROWS`` to ``results/bench/BENCH_<stem>.json`` and return the
+    path.  Rows are left intact (callers reset between modules)."""
+    BENCH_DIR.mkdir(parents=True, exist_ok=True)
+    path = BENCH_DIR / f"BENCH_{stem}.json"
+    payload = {
+        "benchmark": stem,
+        "unix_time": time.time(),
+        "host": {"platform": platform.platform(),
+                 "python": platform.python_version()},
+        "rows": ROWS,
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
 
 
 def time_fn(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:

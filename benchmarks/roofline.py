@@ -120,17 +120,56 @@ def markdown_table(rows: List[Dict], mesh: str = "16x16") -> str:
     return "\n".join(out)
 
 
+def straggler_sim(name: str, *, p: int = 16, slow: float = 0.85) -> None:
+    """Unified-runtime cross-check of the roofline's perfect-speed
+    assumption: partition the dominant stream over ``p`` chips with one
+    straggler at ``slow``× speed.  A static partition is gated by the
+    straggler (frac ≈ slow) — multiply the roofline fraction by this factor
+    for a skewed mesh.  The adaptive row is pinned alongside: under the
+    current engine adaptive steals only at region start, so it does *not*
+    recover the straggler gap — exactly the ROADMAP's interruptible
+    StaticPartitionPolicy open item.
+    """
+    from repro.core import (AdaptivePolicy, CostModel, StaticPartitionPolicy,
+                            WorkRange, simulate)
+    from .common import emit
+    items = 200_000
+    speeds = [1.0] * p
+    speeds[0] = slow
+    ideal = items / sum(speeds)
+    stat = simulate(WorkRange(0, items), StaticPartitionPolicy(), p,
+                    CostModel(per_item=1.0), seed=0, speeds=speeds)
+    # steal_latency=0: this row isolates the *partitioning* question (can
+    # work migrate off the straggler at all), not steal-protocol costs
+    adap = simulate(WorkRange(0, items), AdaptivePolicy(), p,
+                    CostModel(per_item=1.0, split_overhead=4.0,
+                              steal_latency=0.0),
+                    seed=0, speeds=speeds)
+    emit(f"roofline/straggler_sim/{name}", stat.makespan,
+         f"static_frac={ideal/stat.makespan:.2f} "
+         f"adaptive_frac={ideal/adap.makespan:.2f} p={p} slow={slow}",
+         p=p, slow=slow, static_frac=ideal / stat.makespan,
+         adaptive_frac=ideal / adap.makespan)
+
+
 def run() -> None:
     from .common import emit
-    if not RESULTS.exists():
+    rows = load_all() if RESULTS.exists() else []
+    if not rows:
         emit("roofline/missing", 0.0, "run launch/dryrun.py first")
+        # artifacts absent: still exercise the unified-runtime overlap model
+        # on a nominal cell so the trajectory has the straggler rows
+        straggler_sim("nominal")
         return
-    rows = load_all()
     for r in rows:
         emit(f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}",
              max(r["t_comp_s"], r["t_mem_s"], r["t_coll_s"]) * 1e6,
              f"dominant={r['dominant']} useful={r['useful_ratio']:.2f} "
-             f"frac={r['roofline_fraction']:.2f} mem={r['mem_gib']:.1f}GiB")
+             f"frac={r['roofline_fraction']:.2f} mem={r['mem_gib']:.1f}GiB",
+             dominant=r["dominant"], useful_ratio=r["useful_ratio"],
+             roofline_fraction=r["roofline_fraction"],
+             mem_gib=r["mem_gib"])
+        straggler_sim(f"{r['mesh']}/{r['arch']}/{r['shape']}")
 
 
 if __name__ == "__main__":

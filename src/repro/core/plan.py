@@ -45,9 +45,56 @@ class PlanNode:
             yield from self.left.leaves()
             yield from self.right.leaves()
 
+    def span(self) -> Tuple[int, int]:
+        """[start, stop) covered by this subtree, from the leaves' work
+        descriptors (requires range-like work: ``start``/``stop``)."""
+        if self.is_leaf:
+            w = _underlying(self.work)
+            return (w.start, w.stop)
+        ls, _ = self.left.span()
+        _, rs = self.right.span()
+        return (ls, rs)
+
 
 def _underlying(work: Divisible) -> Divisible:
     return work.unwrap() if isinstance(work, Adaptor) else work
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeLevel:
+    """One level of a level-synchronous reduction schedule.
+
+    ``pairs`` lists, for every merge happening at this level, the half-open
+    spans of its left and right operands: ``((a_start, a_stop),
+    (b_start, b_stop))``.  A *uniform* level (equal-length, adjacent,
+    contiguous pairs — what a balanced power-of-two sort plan produces) can
+    drive a single fixed-block kernel launch with ``grid=(num_pairs, ...)``.
+    """
+
+    pairs: Tuple[Tuple[Tuple[int, int], Tuple[int, int]], ...]
+
+    @property
+    def num_pairs(self) -> int:
+        return len(self.pairs)
+
+    @property
+    def uniform(self) -> bool:
+        """True iff every pair merges two adjacent equal-length runs and the
+        pairs tile a contiguous region in order."""
+        if not self.pairs:
+            return False
+        run = self.pairs[0][0][1] - self.pairs[0][0][0]
+        pos = self.pairs[0][0][0]
+        for (a0, a1), (b0, b1) in self.pairs:
+            if a1 - a0 != run or b1 - b0 != run or a1 != b0 or a0 != pos:
+                return False
+            pos = b1
+        return True
+
+    @property
+    def run_length(self) -> int:
+        """Uniform operand length (left == right) — only valid if uniform."""
+        return self.pairs[0][0][1] - self.pairs[0][0][0]
 
 
 @dataclasses.dataclass
@@ -76,6 +123,41 @@ class Plan:
     def is_balanced(self) -> bool:
         sizes = self.leaf_sizes()
         return len(set(sizes)) <= 1
+
+    def levels(self) -> List[List[PlanNode]]:
+        """Nodes grouped by depth, root (depth 0) first, left-to-right within
+        a level — the level-order view of the division tree."""
+        out: List[List[PlanNode]] = []
+
+        def go(node: PlanNode, d: int) -> None:
+            if d == len(out):
+                out.append([])
+            out[d].append(node)
+            if not node.is_leaf:
+                go(node.left, d + 1)
+                go(node.right, d + 1)
+
+        go(self.root, 0)
+        return out
+
+    def merge_schedule(self) -> List[MergeLevel]:
+        """Bottom-up level-synchronous reduction schedule.
+
+        Level ``i`` merges the children of every internal node at the
+        ``i``-th deepest internal depth; running the levels in order performs
+        the same tree reduction as :meth:`map_reduce`, but batched so one
+        kernel launch can cover a whole level.  A plan built over
+        ``even_levels(...)`` work yields an even number of levels (every leaf
+        sits at even depth), which is how the paper's merge sort keeps
+        results landing in the right buffer.
+        """
+        out: List[MergeLevel] = []
+        for nodes in reversed(self.levels()):
+            internal = [n for n in nodes if not n.is_leaf]
+            if internal:
+                out.append(MergeLevel(pairs=tuple(
+                    (n.left.span(), n.right.span()) for n in internal)))
+        return out
 
     # -- execution helpers ---------------------------------------------------
     def map_reduce(self, map_fn: Callable[[Divisible], Any],
@@ -200,4 +282,5 @@ def geometric_blocks(total: int, *, first: int, growth: float = 2.0,
     return out
 
 
-__all__ = ["Plan", "PlanNode", "build_plan", "demand_split", "geometric_blocks"]
+__all__ = ["Plan", "PlanNode", "MergeLevel", "build_plan", "demand_split",
+           "geometric_blocks"]

@@ -1,16 +1,24 @@
 """Pallas stable merge sort — the paper's §3.7 showcase, deployed for MoE
 token dispatch.
 
-Structure mirrors Kvik's sort exactly:
-  1. the input is divided into tiles by a Kvik plan (``even_levels`` ensures
-     merge results land in the right buffer — here the tree is materialized
-     functionally so the adaptor's concern becomes tile-count parity),
-  2. each tile is sorted locally by a **bitonic network kernel** (the
-     "sequential fallback" of the paper becomes the MXU/VPU-friendly
-     fixed-size network — TPU adaptation, see DESIGN.md),
-  3. sorted tiles are fused pairwise up the plan's **reduction tree** with a
-     **bitonic merge kernel** (concat(A, reverse(B)) is bitonic; log2(n)
-     monotonic compare-exchange stages finish the merge).
+Structure mirrors Kvik's sort, batched level-by-level for a compiled target
+(full design note: ``src/repro/kernels/DESIGN.md``):
+
+  1. the input is divided into tiles by a Kvik plan
+     (``even_levels(bound_depth(...))`` — ``even_levels`` keeps the merge
+     level count even, the paper's right-buffer concern),
+  2. each tile is sorted locally by a **bitonic network kernel** whose
+     compare-exchange is pure reshape/min/max (no 1-D gathers — TPU VPU
+     friendly),
+  3. sorted runs are fused pairwise, **one ``pallas_call`` per merge
+     level**: the plan's :meth:`~repro.core.plan.Plan.merge_schedule` drives
+     a ``grid=(num_pairs, blocks_per_pair)`` launch in which every grid cell
+     produces one fixed ``tile``-sized slice of merged output.  Merge-path
+     (diagonal co-rank binary search) partitioning assigns each cell a
+     ≤ ``tile`` window of each input run, so per-program VMEM stays at
+     2·tile inputs + 1·tile output *independent of n*, and the whole merge
+     tree costs exactly ``log2(n/tile)`` kernel launches instead of the
+     ``n/tile − 1`` per-pair launches of the old tree.
 
 Stability: keys are packed as ``key << IDX_BITS | index`` into uint32 before
 sorting — equal keys order by original index, which is what keeps intra-expert
@@ -20,9 +28,11 @@ token order deterministic in MoE dispatch (and what made the paper's sort
 
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import functools
 import math
-from typing import Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +42,45 @@ from ..core import SeqWork, bound_depth, build_plan, even_levels
 
 IDX_BITS = 20                 # tiles up to 2^20 elements
 IDX_MASK = (1 << IDX_BITS) - 1
+SENTINEL = 0xFFFFFFFF            # sorts after every real packed key
+
+
+# ---------------------------------------------------------------------------
+# launch accounting — lets tests pin the launch count and block footprint
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LaunchRecord:
+    kind: str                 # "tile_sort" | "merge_level"
+    grid: tuple
+    max_block_elems: int      # largest single in/out block, in elements
+
+
+_TRACE: Optional[List[LaunchRecord]] = None
+
+
+@contextlib.contextmanager
+def trace_launches():
+    """Record every ``pallas_call`` this module issues while the context is
+    open (counts *traced* calls — use on un-jitted entry points)."""
+    global _TRACE
+    prev, _TRACE = _TRACE, []
+    try:
+        yield _TRACE
+    finally:
+        _TRACE = prev
+
+
+def _pallas_call(kernel, *, kind: str, grid, in_specs, out_specs, out_shape,
+                 interpret):
+    if _TRACE is not None:
+        blocks = [s.block_shape for s in in_specs] + [out_specs.block_shape]
+        _TRACE.append(LaunchRecord(
+            kind=kind, grid=tuple(grid),
+            max_block_elems=max(math.prod(b) for b in blocks)))
+    return pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
+                          out_specs=out_specs, out_shape=out_shape,
+                          interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -39,17 +88,20 @@ IDX_MASK = (1 << IDX_BITS) - 1
 # ---------------------------------------------------------------------------
 
 def _compare_exchange(x: jnp.ndarray, j: int, k: int) -> jnp.ndarray:
-    """One bitonic stage: partner = i ^ j, direction from bit k of i."""
-    n = x.shape[0]
-    idx = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
-    partner = idx ^ j
-    xp = x[partner]
-    up = (idx & k) == 0
-    lo = jnp.minimum(x, xp)
-    hi = jnp.maximum(x, xp)
-    is_lower = idx < partner
-    want_lo = jnp.where(up, is_lower, ~is_lower)
-    return jnp.where(want_lo, lo, hi)
+    """One bitonic stage via reshape/stride swaps — no gathers.
+
+    Pairing (i, i^j) with i's j-bit clear is exactly the (row, lane) split of
+    a ``(m/2j, 2, j)`` view; the direction bit ``i & k`` is constant per row
+    because ``k ≥ 2j`` in every stage of the network.
+    """
+    m = x.shape[0]
+    y = x.reshape(m // (2 * j), 2, j)
+    a, b = y[:, 0, :], y[:, 1, :]
+    lo, hi = jnp.minimum(a, b), jnp.maximum(a, b)
+    row = jax.lax.broadcasted_iota(jnp.int32, (m // (2 * j), 1), 0)
+    up = ((row * (2 * j)) & k) == 0
+    return jnp.stack([jnp.where(up, lo, hi), jnp.where(up, hi, lo)],
+                     axis=1).reshape(m)
 
 
 def _bitonic_sort_network(x: jnp.ndarray) -> jnp.ndarray:
@@ -66,11 +118,15 @@ def _bitonic_sort_network(x: jnp.ndarray) -> jnp.ndarray:
 
 
 def _bitonic_merge_network(x: jnp.ndarray) -> jnp.ndarray:
-    """Monotonic merge of a bitonic input (ascending result)."""
-    n = x.shape[0]
-    j = n // 2
+    """Monotonic merge of a bitonic input (ascending result).  All stages run
+    ascending (``k = n``), so the direction select drops out entirely."""
+    m = x.shape[0]
+    j = m // 2
     while j >= 1:
-        x = _compare_exchange(x, j, n)  # k = n → all ascending
+        y = x.reshape(m // (2 * j), 2, j)
+        a, b = y[:, 0, :], y[:, 1, :]
+        x = jnp.stack([jnp.minimum(a, b), jnp.maximum(a, b)],
+                      axis=1).reshape(m)
         j //= 2
     return x
 
@@ -83,11 +139,21 @@ def _tile_sort_kernel(x_ref, o_ref):
     o_ref[...] = _bitonic_sort_network(x_ref[...])
 
 
-def _merge_kernel(a_ref, b_ref, o_ref, *, n: int):
-    a = a_ref[...]
-    b = b_ref[...]
-    bi = jnp.concatenate([a, b[::-1]])     # bitonic by construction
-    o_ref[...] = _bitonic_merge_network(bi)
+def _merge_level_kernel(la_ref, a_ref, b_ref, o_ref):
+    """Merge one fixed tile-sized output block of one run pair.
+
+    ``a_ref``/``b_ref`` hold the merge-path windows for this block (≤ tile
+    valid elements each, ``la`` of them from A); positions past the valid
+    length are masked to the sentinel, the concat(A, reverse(B)) sequence is
+    bitonic, and a gather-free bitonic merge finishes the block.
+    """
+    tile = a_ref.shape[-1]
+    la = la_ref[0, 0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0).reshape(tile)
+    a = jnp.where(idx < la, a_ref[0, 0, :], jnp.uint32(SENTINEL))
+    b = jnp.where(idx < tile - la, b_ref[0, 0, :], jnp.uint32(SENTINEL))
+    merged = _bitonic_merge_network(jnp.concatenate([a, b[::-1]]))
+    o_ref[0, 0, :] = merged[:tile]
 
 
 def tile_sort(x: jnp.ndarray, *, tile: int = 1024,
@@ -97,8 +163,9 @@ def tile_sort(x: jnp.ndarray, *, tile: int = 1024,
     tile = min(tile, n)
     assert n % tile == 0 and (tile & (tile - 1)) == 0
     nt = n // tile
-    return pl.pallas_call(
+    return _pallas_call(
         _tile_sort_kernel,
+        kind="tile_sort",
         grid=(nt,),
         in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
         out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
@@ -107,72 +174,190 @@ def tile_sort(x: jnp.ndarray, *, tile: int = 1024,
     )(x)
 
 
-def merge_pair(a: jnp.ndarray, b: jnp.ndarray, *,
-               interpret: bool = True) -> jnp.ndarray:
-    """Merge two sorted arrays of equal power-of-two length."""
-    n = a.shape[0]
-    return pl.pallas_call(
-        functools.partial(_merge_kernel, n=n),
-        in_specs=[pl.BlockSpec((n,), lambda: (0,)),
-                  pl.BlockSpec((n,), lambda: (0,))],
-        out_specs=pl.BlockSpec((2 * n,), lambda: (0,)),
-        out_shape=jax.ShapeDtypeStruct((2 * n,), a.dtype),
+# ---------------------------------------------------------------------------
+# merge-path partitioning (driver-side, vectorized over every output block)
+# ---------------------------------------------------------------------------
+
+def _merge_path_starts(ab: jnp.ndarray, run: int, tile: int):
+    """Co-rank split of every output diagonal of every run pair.
+
+    ab: (num_pairs, 2, run) sorted runs.  For each pair and each diagonal
+    ``d = b*tile`` (b = 0..2·run/tile), binary-search the smallest ``ia``
+    with ``A[ia] > B[d-1-ia]`` — the count of A elements among the first
+    ``d`` elements of the stable merge (ties go to A).  Returns
+    ``(a_start, b_start, la)``, each (num_pairs, blocks_per_pair) int32.
+    """
+    num_pairs = ab.shape[0]
+    nb = (2 * run) // tile
+    a_run, b_run = ab[:, 0, :], ab[:, 1, :]
+    d = jnp.arange(nb + 1, dtype=jnp.int32) * tile                 # (nb+1,)
+    lo = jnp.broadcast_to(jnp.maximum(0, d - run), (num_pairs, nb + 1))
+    hi = jnp.broadcast_to(jnp.minimum(d, run), (num_pairs, nb + 1))
+    steps = max(1, run).bit_length() + 1
+
+    def body(_, lohi):
+        lo, hi = lohi
+        active = lo < hi
+        mid = (lo + hi) // 2
+        a_mid = jnp.take_along_axis(a_run, jnp.clip(mid, 0, run - 1), axis=1)
+        b_idx = jnp.clip(d[None, :] - 1 - mid, 0, run - 1)
+        b_val = jnp.take_along_axis(b_run, b_idx, axis=1)
+        go_right = a_mid <= b_val          # A[mid] within the first d merged
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+        return lo, hi
+
+    ia, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    a_start = ia[:, :-1]
+    la = ia[:, 1:] - ia[:, :-1]
+    b_start = d[None, :-1] - a_start
+    return a_start, b_start, la
+
+
+def _extract_windows(runs: jnp.ndarray, start: jnp.ndarray,
+                     tile: int) -> jnp.ndarray:
+    """Fixed tile-sized windows of each run at per-block start offsets.
+
+    runs: (num_pairs, run), start: (num_pairs, nb) → (num_pairs, nb, tile).
+    Reads past the run end are clamped; the kernel masks them out via ``la``.
+    """
+    num_pairs, run = runs.shape
+    nb = start.shape[1]
+    idx = start[:, :, None] + jnp.arange(tile, dtype=jnp.int32)[None, None, :]
+    idx = jnp.minimum(idx, run - 1)
+    src = jnp.broadcast_to(runs[:, None, :], (num_pairs, nb, run))
+    return jnp.take_along_axis(src, idx, axis=2)
+
+
+def _merge_level(x: jnp.ndarray, *, run: int, tile: int,
+                 interpret: bool) -> jnp.ndarray:
+    """Merge all adjacent (2·run)-pairs of sorted runs in one pallas_call."""
+    n = x.shape[0]
+    assert n % (2 * run) == 0 and run % tile == 0
+    num_pairs = n // (2 * run)
+    nb = (2 * run) // tile                       # output blocks per pair
+    ab = x.reshape(num_pairs, 2, run)
+    a_start, b_start, la = _merge_path_starts(ab, run, tile)
+    a_win = _extract_windows(ab[:, 0, :], a_start, tile)
+    b_win = _extract_windows(ab[:, 1, :], b_start, tile)
+    out = _pallas_call(
+        _merge_level_kernel,
+        kind="merge_level",
+        grid=(num_pairs, nb),
+        in_specs=[pl.BlockSpec((1, 1), lambda p, b: (p, b)),
+                  pl.BlockSpec((1, 1, tile), lambda p, b: (p, b, 0)),
+                  pl.BlockSpec((1, 1, tile), lambda p, b: (p, b, 0))],
+        out_specs=pl.BlockSpec((1, 1, tile), lambda p, b: (p, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_pairs, nb, tile), x.dtype),
         interpret=interpret,
-    )(a, b)
+    )(la, a_win, b_win)
+    return out.reshape(n)
+
+
+def merge_pair(a: jnp.ndarray, b: jnp.ndarray, *, tile: int = 1024,
+               interpret: bool = True) -> jnp.ndarray:
+    """Merge two sorted arrays of equal power-of-two length.
+
+    Compatibility wrapper: one num_pairs=1 level of the level-batched
+    merge-path kernel.
+    """
+    n = a.shape[0]
+    return _merge_level(jnp.concatenate([a, b]), run=n, tile=min(tile, n),
+                        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
-# composed sort (tile plan + merge tree)
+# composed sort (tile plan + level-batched merge schedule)
 # ---------------------------------------------------------------------------
 
 def sort_u32(x: jnp.ndarray, *, tile: int = 1024,
              interpret: bool = True) -> jnp.ndarray:
-    """Stable-ready sort of packed uint32 keys via tile-sort + merge tree.
+    """Stable-ready sort of packed uint32 keys: tile sort, then one launch
+    per merge level of the plan's schedule.
 
-    The division is a Kvik plan: even_levels(bound_depth(...)) over the index
-    range — exactly the adaptor stack the paper's sort uses.
+    The division is a Kvik plan: ``even_levels(bound_depth(...))`` over the
+    index range — the adaptor stack the paper's sort uses.  ``even_levels``
+    parity is realized on the tile count (halve the tile once so the level
+    count is even), then the plan's :meth:`merge_schedule` drives the levels.
     """
     n = x.shape[0]
-    assert (n & (n - 1)) == 0, "power-of-two input (pad first)"
+    if n & (n - 1):
+        raise ValueError(f"sort_u32 needs a power-of-two input, got n={n} "
+                         "(pad first)")
     tile = min(tile, n)
     depth = int(math.log2(n // tile))
-    if depth % 2 == 1 and n >> (depth + 1) >= 2:
+    parity_ok = depth % 2 == 0
+    if not parity_ok and tile >= 2:
         depth += 1          # even merge parity — the paper's even_levels
         tile = n >> depth   # concern, realized on the tile count
-    sorted_tiles = tile_sort(x, tile=tile, interpret=interpret)
+        parity_ok = True
+    x = tile_sort(x, tile=tile, interpret=interpret)
     if depth == 0:
-        return sorted_tiles
+        return x
 
-    plan = build_plan(bound_depth(SeqWork(0, n, align=tile, min_size=tile),
-                                  depth))
+    # tile == 1 with odd depth cannot be re-tiled; run the odd schedule
+    # rather than let even_levels force division below one element
+    work = bound_depth(SeqWork(0, n, align=tile, min_size=tile), depth)
+    plan = build_plan(even_levels(work) if parity_ok else work)
+    schedule = plan.merge_schedule()
+    assert len(schedule) == depth
+    for level in schedule:
+        assert level.uniform, "sort plan must divide into uniform runs"
+        x = _merge_level(x, run=level.run_length, tile=tile,
+                         interpret=interpret)
+    return x
 
-    def leaf(work):
-        return sorted_tiles[work.start:work.stop]
 
-    def merge(a, b):
-        return merge_pair(a, b, interpret=interpret)
-
-    return plan.map_reduce(leaf, merge)
-
-
-def argsort(keys: jnp.ndarray, *, num_key_bits: int = 12, tile: int = 1024,
-            interpret: bool = True) -> jnp.ndarray:
-    """Stable argsort of small-integer keys (expert ids) — MoE dispatch entry.
-
-    keys: (n,) int32 with values < 2^num_key_bits; n padded to a power of two
-    internally (pad keys sort to the end and are dropped).
-    """
-    n = keys.shape[0]
-    n_pad = 1 << math.ceil(math.log2(max(2, n)))
-    assert num_key_bits + IDX_BITS <= 32
+def _argsort_impl(keys: jnp.ndarray, *, n: int, n_pad: int,
+                  tile: int, interpret: bool) -> jnp.ndarray:
     packed = (keys.astype(jnp.uint32) << IDX_BITS) | \
         jnp.arange(n, dtype=jnp.uint32)
     if n_pad != n:
-        pad = jnp.full((n_pad - n,), jnp.uint32(0xFFFFFFFF))
+        pad = jnp.full((n_pad - n,), SENTINEL, jnp.uint32)
         packed = jnp.concatenate([packed, pad])
     out = sort_u32(packed, tile=tile, interpret=interpret)
     order = (out & IDX_MASK).astype(jnp.int32)
     return order[:n]
 
 
-__all__ = ["argsort", "sort_u32", "tile_sort", "merge_pair"]
+@functools.partial(jax.jit, static_argnames=("n", "n_pad", "tile",
+                                             "interpret"))
+def _argsort_jitted(keys, *, n, n_pad, tile, interpret):
+    return _argsort_impl(keys, n=n, n_pad=n_pad, tile=tile,
+                         interpret=interpret)
+
+
+def argsort(keys: jnp.ndarray, *, num_key_bits: int = 12, tile: int = 1024,
+            interpret: bool = True, jit: bool = False) -> jnp.ndarray:
+    """Stable argsort of small-integer keys (expert ids) — MoE dispatch entry.
+
+    keys: (n,) int32 with values in [0, 2^num_key_bits); n padded to a power
+    of two internally (pad keys sort to the end and are dropped).  With
+    ``jit=True`` the whole pipeline (pack → tile sort → merge levels →
+    unpack) runs as one compiled program, cached per (n, tile).
+    """
+    n = keys.shape[0]
+    if n > (1 << IDX_BITS):
+        raise ValueError(
+            f"argsort supports at most 2^{IDX_BITS} = {1 << IDX_BITS} "
+            f"elements, got n={n}: packed indices would overflow IDX_BITS "
+            "and collide with the keys (raise IDX_BITS / shrink the batch)")
+    if num_key_bits + IDX_BITS > 32:
+        raise ValueError(
+            f"num_key_bits={num_key_bits} does not fit: key and index must "
+            f"pack into 32 bits (num_key_bits + {IDX_BITS} ≤ 32)")
+    if not isinstance(keys, jax.core.Tracer):
+        kmax = int(jnp.max(keys)) if n else 0
+        if kmax >= 1 << num_key_bits:
+            raise ValueError(
+                f"keys must be < 2^num_key_bits = {1 << num_key_bits}, got "
+                f"max key {kmax}: packed keys would collide with the index "
+                "bits and silently corrupt the order (raise num_key_bits)")
+    n_pad = 1 << math.ceil(math.log2(max(2, n)))
+    fn = _argsort_jitted if jit else _argsort_impl
+    return fn(jnp.asarray(keys), n=n, n_pad=n_pad, tile=tile,
+              interpret=interpret)
+
+
+__all__ = ["argsort", "sort_u32", "tile_sort", "merge_pair",
+           "trace_launches", "LaunchRecord", "IDX_BITS", "IDX_MASK"]

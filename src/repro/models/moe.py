@@ -21,6 +21,7 @@ load-balance loss returned for the trainer.
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 
@@ -159,8 +160,9 @@ def moe_sort_dispatch(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
     """Single-shard sort-based MoE (exact, gather/scatter based).
 
     ``sort_fn(keys) -> order`` must be a *stable* argsort — by default
-    ``jnp.argsort(stable=True)``; the TPU path passes the Pallas merge-sort
-    (``repro.kernels.merge_sort.ops.argsort``), making MoE dispatch literally
+    ``jnp.argsort(stable=True)``; pass ``sort_fn="pallas"`` (or any callable)
+    to route through the level-batched Pallas merge sort
+    (``repro.kernels.merge_sort.argsort``), making MoE dispatch literally
     the paper's §3.7 algorithm.  Capacity-free (dropless): every token is
     processed; expert batches are ragged, realized as one grouped einsum over
     a (T·K, D) permuted activation with segment boundaries.
@@ -168,6 +170,11 @@ def moe_sort_dispatch(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
     B, S, D = x.shape
     E, K = cfg.num_experts, cfg.top_k
     T = B * S
+    if sort_fn == "pallas":
+        from ..kernels.merge_sort import argsort as kernel_argsort
+        bits = max(1, math.ceil(math.log2(max(2, E))))
+        sort_fn = functools.partial(kernel_argsort, num_key_bits=bits,
+                                    interpret=True)
     xf = x.reshape(T, D)
     probs, experts, aux = route_topk(params["router"], xf, K)     # (T,K)
 

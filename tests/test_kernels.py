@@ -1,5 +1,7 @@
 """Per-kernel allclose tests: shape/dtype sweeps against the jnp oracles."""
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +10,7 @@ from hypothesis import given, settings
 import hypothesis.strategies as st
 
 from repro.kernels import ref
+from repro.kernels import merge_sort
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import combine_partials, flash_decode
 from repro.kernels.merge_sort import argsort, merge_pair, sort_u32, tile_sort
@@ -150,3 +153,114 @@ def test_argsort_stability_heavy_duplicates():
     keys = np.zeros(1000, np.int32)          # all equal → order == identity
     order = argsort(jnp.asarray(keys), tile=256, interpret=True)
     np.testing.assert_array_equal(np.asarray(order), np.arange(1000))
+
+
+# ---------------------------------------------------------------------------
+# level-batched merge-path sort (PR 2 tentpole)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,tile", [(1 << 12, 256), (1 << 14, 1024),
+                                    (1 << 16, 1024)])
+def test_merge_tree_launch_count_pinned(n, tile):
+    """The merge tree must run in exactly log2(n/tile) pallas_call launches
+    (plus the single tile-sort launch) with every block ≤ 2·tile elements,
+    independent of n — the level-batched structure, pinned."""
+    x = jnp.asarray(np.random.RandomState(0).randint(
+        0, 2 ** 31, n).astype(np.uint32))
+    with merge_sort.trace_launches() as tr:
+        out = sort_u32(x, tile=tile, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(np.asarray(x)))
+    kinds = [r.kind for r in tr]
+    assert kinds.count("tile_sort") == 1
+    assert kinds.count("merge_level") == int(math.log2(n // tile))
+    assert len(tr) == 1 + int(math.log2(n // tile))
+    assert max(r.max_block_elems for r in tr) <= 2 * tile
+    # level L merges 2^L-tile runs: grid=(num_pairs, blocks_per_pair)
+    for L, rec in enumerate(r for r in tr if r.kind == "merge_level"):
+        run = tile << L
+        assert rec.grid == (n // (2 * run), (2 * run) // tile)
+
+
+def test_merge_level_matches_reference_merge():
+    """One level kernel call over several pairs == per-pair np.merge."""
+    rng = np.random.RandomState(7)
+    tile, run, num_pairs = 64, 256, 4
+    runs = np.sort(rng.randint(0, 1 << 30, (num_pairs, 2, run)).astype(
+        np.uint32), axis=-1)
+    x = jnp.asarray(runs.reshape(-1))
+    out = np.asarray(merge_sort._merge_level(
+        x, run=run, tile=tile, interpret=True)).reshape(num_pairs, 2 * run)
+    for p in range(num_pairs):
+        expect = np.sort(np.concatenate([runs[p, 0], runs[p, 1]]))
+        np.testing.assert_array_equal(out[p], expect)
+
+
+def test_merge_path_starts_corank_invariants():
+    """Co-rank splits: monotone, diagonal-consistent, and exact on a known
+    stable merge (ties go to A)."""
+    rng = np.random.RandomState(3)
+    run, tile = 128, 32
+    a = np.sort(rng.randint(0, 16, run).astype(np.uint32))
+    b = np.sort(rng.randint(0, 16, run).astype(np.uint32))
+    ab = jnp.asarray(np.stack([a, b])[None])
+    a_start, b_start, la = (np.asarray(v) for v in
+                            merge_sort._merge_path_starts(ab, run, tile))
+    assert a_start.shape == (1, 2 * run // tile)
+    # every diagonal splits exactly: a_start + b_start == d, lengths sum tile
+    d = np.arange(2 * run // tile) * tile
+    np.testing.assert_array_equal(a_start[0] + b_start[0], d)
+    assert (la >= 0).all() and (la <= tile).all()
+    # exact co-rank: count of A elements among first d of the stable merge
+    packed = np.concatenate([a.astype(np.uint64) * 2,       # A before equal B
+                             b.astype(np.uint64) * 2 + 1])
+    order = np.argsort(packed, kind="stable")
+    for i, dd in enumerate(d):
+        expect_ia = int((order[:dd] < run).sum())
+        assert a_start[0, i] == expect_ia
+
+
+@pytest.mark.parametrize("n,tile", [(16, 2), (8, 1), (32, 2), (64, 1)])
+def test_sort_u32_tiny_tiles_odd_depth(n, tile):
+    """Odd merge depth with tiles too small to halve must still sort (the
+    parity adjustment falls back to an odd schedule, regression test)."""
+    x = np.random.RandomState(n).randint(0, 2 ** 31, n).astype(np.uint32)
+    out = np.asarray(sort_u32(jnp.asarray(x), tile=tile, interpret=True))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 255, 257, 1000, 1023, 4097])
+@pytest.mark.parametrize("key_bits", [1, 3, 11])
+def test_argsort_property_sweep_vs_stable_oracle(n, key_bits):
+    """Non-power-of-two sizes × duplicate-heavy keys vs np stable argsort
+    (explicit sweep — runs even when hypothesis is stubbed out)."""
+    keys = np.random.RandomState(n * 31 + key_bits).randint(
+        0, 1 << key_bits, n).astype(np.int32)
+    order = argsort(jnp.asarray(keys), tile=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(order),
+                                  np.argsort(keys, kind="stable"))
+
+
+def test_argsort_jit_end_to_end():
+    keys = np.random.RandomState(5).randint(0, 64, 777).astype(np.int32)
+    order = argsort(jnp.asarray(keys), tile=256, interpret=True, jit=True)
+    np.testing.assert_array_equal(np.asarray(order),
+                                  np.argsort(keys, kind="stable"))
+
+
+def test_argsort_guard_too_many_elements():
+    n = (1 << merge_sort.IDX_BITS) + 1
+    with pytest.raises(ValueError, match="at most"):
+        argsort(jnp.zeros(n, jnp.int32))
+
+
+def test_argsort_guard_key_overflow():
+    with pytest.raises(ValueError, match="collide with the index"):
+        argsort(jnp.asarray([1, 1 << 4, 3], dtype=jnp.int32), num_key_bits=4)
+    with pytest.raises(ValueError, match="pack into 32 bits"):
+        argsort(jnp.asarray([0, 1], dtype=jnp.int32), num_key_bits=13)
+    # boundary passes: max legal key value sorts fine
+    keys = np.asarray([(1 << 4) - 1, 0, (1 << 4) - 1], np.int32)
+    order = argsort(jnp.asarray(keys), num_key_bits=4, tile=256,
+                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(order),
+                                  np.argsort(keys, kind="stable"))

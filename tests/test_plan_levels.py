@@ -1,0 +1,83 @@
+"""Plan.levels() / merge_schedule(): the level-order API driving the
+level-batched merge kernel (PR 2 tentpole)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (SeqWork, WorkRange, bound_depth, build_plan,
+                        demand_split, even_levels)
+
+
+def balanced_plan(n=1024, tile=64):
+    import math
+    depth = int(math.log2(n // tile))
+    return build_plan(even_levels(bound_depth(
+        SeqWork(0, n, align=tile, min_size=tile), depth))), depth
+
+
+def test_levels_groups_nodes_by_depth():
+    plan, depth = balanced_plan()
+    lv = plan.levels()
+    assert len(lv) == depth + 1
+    for d, nodes in enumerate(lv):
+        assert len(nodes) == 1 << d
+        assert all(n.depth == d for n in nodes)
+    # leaves all at the deepest level for a complete tree
+    assert all(n.is_leaf for n in lv[-1])
+
+
+def test_node_span_covers_leaves():
+    plan, _ = balanced_plan()
+    assert plan.root.span() == (0, 1024)
+    l, r = plan.root.left.span(), plan.root.right.span()
+    assert l == (0, 512) and r == (512, 1024)
+
+
+def test_merge_schedule_bottom_up_uniform():
+    plan, depth = balanced_plan(n=1024, tile=64)
+    sched = plan.merge_schedule()
+    assert len(sched) == depth
+    run = 64
+    for level in sched:
+        assert level.uniform
+        assert level.run_length == run
+        assert level.num_pairs == 1024 // (2 * run)
+        run *= 2
+
+
+def test_merge_schedule_even_levels_parity():
+    """even_levels work ⇒ an even number of merge levels (the paper's
+    right-buffer guarantee, realized on the schedule length)."""
+    for n, tile in [(1024, 64), (4096, 256), (1 << 14, 1 << 10)]:
+        plan, depth = balanced_plan(n, tile)
+        assert depth % 2 == 0
+        assert len(plan.merge_schedule()) % 2 == 0
+
+
+def test_merge_schedule_equivalent_to_map_reduce():
+    """Executing the schedule level-by-level reproduces map_reduce's tree
+    reduction (on a non-commutative op, so order matters)."""
+    plan, _ = balanced_plan(n=256, tile=32)
+    expect = plan.map_reduce(lambda w: [(w.start, w.stop)], lambda a, b: a + b)
+
+    spans = {(w.start, w.stop): [(w.start, w.stop)] for w in plan.leaves()}
+    for level in plan.merge_schedule():
+        for (a, b) in level.pairs:
+            spans[(a[0], b[1])] = spans.pop(a) + spans.pop(b)
+    assert list(spans) == [(0, 256)]
+    assert spans[(0, 256)] == expect
+
+
+def test_merge_schedule_unbalanced_tree_not_uniform():
+    plan = demand_split(WorkRange(0, 100), demand=3)
+    sched = plan.merge_schedule()
+    # 3 leaves -> 2 merges across (up to) 2 levels, not uniform everywhere
+    assert sum(level.num_pairs for level in sched) == 2
+    assert not all(level.uniform for level in sched)
+
+
+def test_merge_schedule_single_leaf_empty():
+    plan = build_plan(bound_depth(SeqWork(0, 64, min_size=64), 4))
+    assert plan.num_tasks() == 1
+    assert plan.merge_schedule() == []
+    assert len(plan.levels()) == 1
