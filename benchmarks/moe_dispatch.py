@@ -5,10 +5,6 @@ level-batched Pallas merge sort (the §3.7 kernel wired into the layer) —
 plus the analytic FLOP overhead of the einsum dispatch at production scale
 (the quantity the sort path eliminates, §Perf hillclimb evidence), plus the
 dispatch-scaling picture on the unified virtual-time Runtime.
-
-The einsum row needs ``repro.dist`` (GSPMD sharding constraints); while that
-seed gap persists (see ROADMAP) the row is skipped with an explicit marker
-instead of killing the whole benchmark.
 """
 
 from __future__ import annotations
@@ -37,14 +33,10 @@ def run() -> None:
     t_s = time_fn(lambda: f_s(params, x).block_until_ready(), iters=3)
     emit("moe_dispatch/sort_smoke", t_s, f"tokens={tokens}", tokens=tokens)
 
-    try:
-        f_e = jax.jit(lambda p, x: moe_einsum(p, cfg, x)[0])
-        t_e = time_fn(lambda: f_e(params, x).block_until_ready(), iters=3)
-        emit("moe_dispatch/einsum_smoke", t_e, f"ratio_vs_sort={t_e/t_s:.2f}",
-             tokens=tokens, ratio_vs_sort=t_e / t_s)
-    except ModuleNotFoundError as e:
-        emit("moe_dispatch/einsum_smoke", 0.0,
-             f"skipped: seed gap {e.name} (see ROADMAP)", skipped=e.name)
+    f_e = jax.jit(lambda p, x: moe_einsum(p, cfg, x)[0])
+    t_e = time_fn(lambda: f_e(params, x).block_until_ready(), iters=3)
+    emit("moe_dispatch/einsum_smoke", t_e, f"ratio_vs_sort={t_e/t_s:.2f}",
+         tokens=tokens, ratio_vs_sort=t_e / t_s)
 
     # the paper's kernel inside the layer: level-batched Pallas merge sort
     # (interpret mode — structure/correctness on host, not device speed)

@@ -74,15 +74,14 @@ print(f"merge sort: n=4096 tile=512 -> launches={len(tr)} "
       f"(1 tile sort + {len(tr) - 1} even merge levels), stable order ok")
 
 # --- 5. the policy driving a JAX training computation ----------------------
-# (requires repro.dist, which is still missing from this tree — see ROADMAP)
-try:
-    from repro.train.step import TrainState, make_train_step, microbatch_plan
-except ModuleNotFoundError as e:
-    print(f"skipping train-step demo ({e}); sections 1-4 OK")
-    print("QUICKSTART OK")
-    raise SystemExit(0)
+# The same plan machinery decides distribution: microbatch counts come from
+# a thief_splitting plan, the pipeline tick order is a division tree's leaf
+# walk, and every sharding decision is one row of the repro.dist rule table.
+from repro.train.step import TrainState, make_train_step, microbatch_plan
 
-from repro.configs.registry import get_smoke_config
+from repro.configs.registry import get_config, get_smoke_config
+from repro.dist.pipeline import bubble_fraction, schedule_ticks
+from repro.dist.sharding import param_pspec
 from repro.models.model import Model
 from repro.optim.adamw import AdamWConfig, init_state
 
@@ -99,4 +98,17 @@ batch = {"tokens": jnp.ones((8, 32), jnp.int32),
          "labels": jnp.ones((8, 32), jnp.int32)}
 state, metrics = step(state, batch)
 print("train step:", {k: float(v) for k, v in metrics.items()})
+
+# the sharding rule table: pure (config, path, rank) → PartitionSpec rows
+full = get_config("jamba-1.5-large-398b")
+print("param_pspec rules:",
+      "ffn/gate →", param_pspec(full, "stage/0/ffn/gate", 3), "|",
+      "moe/gate →", param_pspec(full, "stage/1/moe/gate", 4))
+
+# the pipeline schedule is a plan artifact too: its microbatch order is the
+# division tree's left-to-right leaf walk (repro.dist.pipeline)
+ticks = schedule_ticks(4, 8)
+print(f"pipeline fill-drain, 4 stages x 8 microbatches: {len(ticks)} ticks, "
+      f"bubble = {bubble_fraction(4, 8):.1%}")
+print("  tick 3:", " ".join(ticks[3]))
 print("QUICKSTART OK")

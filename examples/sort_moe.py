@@ -42,14 +42,8 @@ cfg_nodrop = dataclasses.replace(cfg, capacity_factor=8.0)
 out_sorted, _ = moe_sort_dispatch(
     params, cfg, x, sort_fn=lambda k: pallas_argsort(k, tile=512,
                                                      interpret=True))
-try:
-    out_einsum, _ = moe_einsum(params, cfg_nodrop, x, group_size=128)
-except ModuleNotFoundError as e:
-    # einsum dispatch needs repro.dist (seed gap, see ROADMAP); the sort
-    # path above is the point of this example and has already been checked
-    print(f"[sort_moe] skipping einsum comparison ({e}); sort path OK")
-else:
-    err = float(jnp.max(jnp.abs(out_einsum - out_sorted)))
-    print(f"[sort_moe] einsum(no-drop) vs sort dispatch max err = {err:.2e}")
-    assert err < 1e-2
+out_einsum, _ = moe_einsum(params, cfg_nodrop, x, group_size=128)
+err = float(jnp.max(jnp.abs(out_einsum - out_sorted)))
+print(f"[sort_moe] einsum(no-drop) vs sort dispatch max err = {err:.2e}")
+assert err < 1e-2
 print("[sort_moe] OK")

@@ -1,0 +1,35 @@
+"""``repro.dist`` — the GSPMD mechanism layer under Kvik's policy layer.
+
+The paper's thesis is that scheduling *policy* composes over a shared
+*mechanism*.  On the jax/pallas target the mechanism at scale is GSPMD
+sharding plus pipeline/collective schedules; this package holds it:
+
+* :mod:`~repro.dist.sharding` — mesh context, the ``param_pspec`` rule
+  table, and the derived params/moments/batch/cache sharding trees,
+* :mod:`~repro.dist.pipeline` — fill–drain microbatch schedules whose
+  tick order comes from a ``core.plan`` division tree, and a
+  ``shard_map`` pipeline executor,
+* :mod:`~repro.dist.collective` — latency-hiding collective matmuls
+  (all-gather × matmul, matmul × reduce-scatter),
+* :mod:`~repro.dist.expert` — ``moe_shard_map`` expert-parallel MoE
+  dispatch built on the paper's stable sort.
+
+See ``DESIGN.md`` in this directory for the rule-table philosophy.
+"""
+
+from .collective import allgather_matmul, matmul_reducescatter
+from .expert import moe_shard_map
+from .pipeline import (bubble_fraction, microbatch_order, pipeline_forward,
+                       schedule_ticks)
+from .sharding import (batch_shardings, cache_shardings, constrain,
+                       current_ctx, dp, mesh_context, moments_shardings,
+                       param_pspec, params_shardings, sanitize_spec,
+                       zero1_spec)
+
+__all__ = [
+    "allgather_matmul", "matmul_reducescatter", "moe_shard_map",
+    "bubble_fraction", "microbatch_order", "pipeline_forward",
+    "schedule_ticks", "batch_shardings", "cache_shardings", "constrain",
+    "current_ctx", "dp", "mesh_context", "moments_shardings", "param_pspec",
+    "params_shardings", "sanitize_spec", "zero1_spec",
+]

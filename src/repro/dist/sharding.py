@@ -1,0 +1,329 @@
+"""Sharding rules: mesh context, the ``param_pspec`` rule table, and the
+derived sharding trees for params / optimizer moments / batches / KV caches.
+
+Philosophy (mirrors the paper's policy/mechanism split): every sharding
+decision is a small *rule* — a pure function from (config, tensor name,
+rank) to a ``PartitionSpec`` — and the mechanism that applies rules is
+shared: ``sanitize_spec`` guards divisibility, ``zero1_spec`` layers the
+optimizer-state data sharding on top, and the ``*_shardings`` builders walk
+pytrees turning rules into ``NamedSharding`` leaves.  Policies stay
+swappable because nothing below this module hard-codes an axis.
+
+Mesh axes (fixed by ``launch/mesh.py``):
+
+  ``pod``   multi-pod replica axis (optional outermost)
+  ``data``  data parallelism; ZeRO-1 moments shard here
+  ``model`` tensor parallelism: vocab, heads, ffn hidden, experts
+
+``mesh_context`` installs a context consulted by ``constrain``/``dp`` — the
+model code is written once and becomes sharded the moment a context is
+active, exactly like Kvik code is written once and scheduled by whichever
+policy wraps it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, List, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+# axes that carry the data-parallel batch dimension, outermost first
+_DP_AXES = ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# mesh context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    """Active mesh plus the two sizes every consumer asks for."""
+
+    mesh: Mesh
+
+    @property
+    def dp(self) -> int:
+        """Data-parallel world size (pod × data)."""
+        n = 1
+        for a in _DP_AXES:
+            n *= self.mesh.shape.get(a, 1)
+        return n
+
+    @property
+    def tp(self) -> int:
+        """Tensor-parallel (model axis) size."""
+        return self.mesh.shape.get("model", 1)
+
+
+_CTX_STACK: List[MeshCtx] = []
+
+
+def current_ctx() -> Optional[MeshCtx]:
+    """The innermost active ``mesh_context``, or None outside one."""
+    return _CTX_STACK[-1] if _CTX_STACK else None
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    """Install ``mesh`` as the ambient sharding context.
+
+    Model code calls ``constrain``/``dp``/``current_ctx`` unconditionally;
+    those are no-ops (or defaults) until a context is entered, so the same
+    trace serves single-device smoke tests and the 512-chip dry-run.
+    """
+    ctx = MeshCtx(mesh)
+    _CTX_STACK.append(ctx)
+    try:
+        with mesh:
+            yield ctx
+    finally:
+        _CTX_STACK.pop()
+
+
+def _dp_entry(mesh) -> Any:
+    """The PartitionSpec entry for the batch dimension on ``mesh``:
+    ``"data"``, ``("pod", "data")``, or None if the mesh has neither."""
+    axes = tuple(a for a in _DP_AXES if a in mesh.shape)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def dp() -> Any:
+    """Batch-axis spec entry under the active context (``"data"`` default).
+
+    Always safe to call at trace time: without a context the returned entry
+    only ever reaches ``constrain``, which is then a no-op.
+    """
+    ctx = current_ctx()
+    return _dp_entry(ctx.mesh) if ctx is not None else "data"
+
+
+def constrain(x, spec: P):
+    """``with_sharding_constraint`` under the active mesh context; identity
+    outside one.  Non-dividing axes are dropped (``sanitize_spec``) so the
+    same constraint serves smoke shapes and production shapes."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    safe = sanitize_spec(ctx.mesh, spec, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, safe))
+
+
+# ---------------------------------------------------------------------------
+# spec algebra: divisibility guard + ZeRO-1
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, entry: Any) -> Optional[int]:
+    """Mesh-axis product of a spec entry, or None if the mesh lacks an
+    axis the entry names (such an entry is inexpressible, not size-1)."""
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, (tuple, list)) else (entry,)
+    n = 1
+    for a in names:
+        if a not in mesh.shape:
+            return None
+        n *= mesh.shape[a]
+    return n
+
+
+def _entries(spec: P, ndim: int) -> List[Any]:
+    got = list(spec)
+    return got + [None] * (ndim - len(got))
+
+
+def sanitize_spec(mesh, spec: P, shape: Sequence[int]) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim.
+
+    GSPMD would pad uneven shards silently; padding changes reduction
+    numerics and memory accounting, so the rule table opts for *replicating*
+    any axis it cannot split exactly.  ``mesh`` only needs a ``.shape``
+    mapping — axis sizes are the whole story.
+    """
+    out = []
+    for dim, entry in zip(shape, _entries(spec, len(shape))):
+        n = _axis_size(mesh, entry)
+        out.append(entry if n is not None and dim % n == 0 else None)
+    return P(*out)
+
+
+def zero1_spec(mesh, spec: P, shape: Sequence[int]) -> P:
+    """Layer ZeRO-1 on a param spec: shard the first free dividing dim over
+    the data axes.  Already data-sharded specs pass through unchanged."""
+    dpe = _dp_entry(mesh)
+    if dpe is None:
+        return sanitize_spec(mesh, spec, shape)
+    dp_axes = set(dpe) if isinstance(dpe, tuple) else {dpe}
+    entries = _entries(spec, len(shape))
+    used = set()
+    for e in entries:
+        used.update(e if isinstance(e, (tuple, list)) else [e])
+    if used & dp_axes:
+        return P(*entries)
+    for i, (dim, entry) in enumerate(zip(shape, entries)):
+        if entry is None and dim % _axis_size(mesh, dpe) == 0 and dim > 1:
+            entries[i] = dpe
+            break
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# the param rule table
+# ---------------------------------------------------------------------------
+
+# column-parallel (output features live on the last axis → shard it):
+_COL = {"wq", "wk", "wv", "gate", "up", "wkv_down", "wk_rope", "wkv_up",
+        "in_proj", "x_proj", "dt_proj", "w", "wi", "wf"}
+# row-parallel (contracting features on the second-to-last axis → shard it,
+# the following all-reduce is the layer's single collective):
+_ROW = {"wo", "down", "out_proj"}
+
+
+def param_pspec(cfg: ModelConfig, name: str, ndim: int) -> P:
+    """The rule table: (config, ``/``-joined tree path, rank) → spec.
+
+    Stacked period parameters carry a leading repeat axis, so the same leaf
+    name appears at two ranks; rules index from the *trailing* axes to stay
+    rank-agnostic.  Pure function of static data — golden-pinned per config
+    in tests/test_pspec_golden.py.
+    """
+    parts = name.split("/")
+    leaf = parts[-1]
+
+    # expert banks: experts over 'model'; the expert hidden dim additionally
+    # over 'data' iff the config opts into 2-D MoE sharding (Jamba-398B —
+    # stationary weights, no per-scan all-gather of a 796 GB bank)
+    if len(parts) >= 2 and parts[-2] == "moe":
+        f_ax = "data" if cfg.moe_2d_shard else None
+        if leaf in ("gate", "up") and ndim >= 3:     # (..., E, D, F)
+            return P(*([None] * (ndim - 3) + ["model", None, f_ax]))
+        if leaf == "down" and ndim >= 3:             # (..., E, F, D)
+            return P(*([None] * (ndim - 3) + ["model", f_ax, None]))
+        return P(*([None] * ndim))                   # router: replicated
+
+    if leaf == "table" and ndim == 2:                # embed / lm head
+        return P("model", None)
+
+    # xLSTM block-diagonal per-head mixers: (..., H, dh, dh) — shard heads
+    if leaf in ("wq", "wk", "wv") and ndim == 4:
+        return P(None, "model", None, None)
+
+    if leaf in _COL and ndim >= 2:
+        return P(*([None] * (ndim - 1) + ["model"]))
+    if leaf in _ROW and ndim >= 2:
+        return P(*([None] * (ndim - 2) + ["model", None]))
+    # norms, biases, gates, rotary tables, positions: replicated
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:  # pragma: no cover - defensive
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def params_shardings(cfg: ModelConfig, params: Any, mesh: Mesh) -> Any:
+    """NamedSharding tree for a param pytree, via the rule table.
+
+    ``cfg.fsdp`` additionally ZeRO-shards the params themselves over data.
+    """
+    def rule(path, leaf):
+        spec = param_pspec(cfg, _path_str(path), leaf.ndim)
+        spec = sanitize_spec(mesh, spec, leaf.shape)
+        if cfg.fsdp:
+            spec = zero1_spec(mesh, spec, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def moments_shardings(cfg: ModelConfig, params: Any, mesh: Mesh) -> Any:
+    """AdamW m/v shardings: the param spec plus ZeRO-1 over data."""
+    def rule(path, leaf):
+        spec = param_pspec(cfg, _path_str(path), leaf.ndim)
+        spec = sanitize_spec(mesh, spec, leaf.shape)
+        spec = zero1_spec(mesh, spec, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, batch: Any) -> Any:
+    """Batch-dim-0 over the data axes, everything else replicated."""
+    dpe = _dp_entry(mesh)
+
+    def rule(leaf):
+        ndim = len(leaf.shape)
+        if ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = P(*([dpe] + [None] * (ndim - 1)))
+        return NamedSharding(mesh, sanitize_spec(mesh, spec, leaf.shape))
+
+    return jax.tree.map(rule, batch)
+
+
+# cache leaves with a sequence axis right after the batch axis
+_SEQ_LEAVES = {"k", "v", "ck", "cv", "latent"}
+# recurrent-state leaves: (B, feature, ...) — shard the feature axis at this
+# offset past batch over 'model' (conv buffers keep channels last)
+_STATE_FEATURE_OFFSET = {"ssm": 1, "C": 1, "n": 1, "m": 1, "c": 1, "h": 1,
+                         "conv": 2}
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache: Any,
+                    batch: int) -> Any:
+    """Decode-cache layout: batch over data, KV sequence over model.
+
+    Long-context (batch == 1) flips to sequence-over-everything — the only
+    way a single 500K-token sequence occupies the whole mesh.  Stacked
+    period caches carry a leading repeat axis (detected from the ``stage``
+    path), recurrent SSM states shard their feature dim over model.  All
+    entries pass the divisibility guard.
+    """
+    dpe = _dp_entry(mesh)
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+
+    def rule(path, leaf):
+        parts = _path_str(path).split("/")
+        name = parts[-1]
+        off = 1 if parts and parts[0] == "stage" else 0
+        ndim = len(leaf.shape)
+        entries: List[Any] = [None] * ndim
+        if name in _SEQ_LEAVES:
+            if batch == 1:
+                entries[off + 1] = all_axes
+            else:
+                entries[off] = dpe
+                entries[off + 1] = "model"
+        else:
+            entries[off] = dpe
+            fa = off + _STATE_FEATURE_OFFSET.get(name, 1)
+            if fa < ndim:
+                entries[fa] = "model"
+        spec = sanitize_spec(mesh, P(*entries), leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+__all__ = [
+    "MeshCtx", "mesh_context", "current_ctx", "constrain", "dp",
+    "sanitize_spec", "zero1_spec", "param_pspec", "params_shardings",
+    "moments_shardings", "batch_shardings", "cache_shardings",
+]

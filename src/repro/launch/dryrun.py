@@ -127,6 +127,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     hlo = compiled.as_text()
     custom = analyze_hlo(hlo)
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # per-computation list on some jax
+        ca = ca[0] if ca else {}
     # persist compressed HLO so the analyzer can be iterated w/o recompiles
     try:
         import zstandard as zstd

@@ -155,17 +155,16 @@ def moe_einsum(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
 # sort-based dispatch (the paper's stable sort at work)
 # ---------------------------------------------------------------------------
 
-def moe_sort_dispatch(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
-                      sort_fn=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Single-shard sort-based MoE (exact, gather/scatter based).
+def sort_route(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+               sort_fn=None):
+    """Shared sort-dispatch prelude: route, flatten to (T·K,) assignments,
+    stably sort by expert id (§3.7 — stability keeps the combine a gather).
 
-    ``sort_fn(keys) -> order`` must be a *stable* argsort — by default
-    ``jnp.argsort(stable=True)``; pass ``sort_fn="pallas"`` (or any callable)
-    to route through the level-batched Pallas merge sort
-    (``repro.kernels.merge_sort.argsort``), making MoE dispatch literally
-    the paper's §3.7 algorithm.  Capacity-free (dropless): every token is
-    processed; expert batches are ragged, realized as one grouped einsum over
-    a (T·K, D) permuted activation with segment boundaries.
+    Returns ``(xd, sorted_e, sorted_tok, sorted_p, aux)`` with ``xd`` the
+    permuted activations (T·K, D).  ``sort_fn(keys) -> order`` must be a
+    *stable* argsort — default ``jnp.argsort(stable=True)``; the string
+    ``"pallas"`` routes through the level-batched Pallas merge sort.  Used
+    by ``moe_sort_dispatch`` and ``repro.dist.expert.moe_shard_map``.
     """
     B, S, D = x.shape
     E, K = cfg.num_experts, cfg.top_k
@@ -184,24 +183,44 @@ def moe_sort_dispatch(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
 
     order = (sort_fn(flat_e) if sort_fn is not None
              else jnp.argsort(flat_e, stable=True))
-    sorted_e = flat_e[order]
+    sorted_e = flat_e[order].astype(jnp.int32)
     sorted_tok = token_of[order]
     sorted_p = flat_p[order]
+    return xf[sorted_tok], sorted_e, sorted_tok, sorted_p, aux
 
-    xd = xf[sorted_tok]                                           # (T·K, D)
+
+def sort_combine(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 y: jnp.ndarray, sorted_tok: jnp.ndarray,
+                 sorted_p: jnp.ndarray) -> jnp.ndarray:
+    """Shared epilogue: combine-weight scale, scatter-add back to token
+    order, shared-expert residual."""
+    B, S, D = x.shape
+    y = y * sorted_p[:, None].astype(y.dtype)
+    out = jnp.zeros((B * S, D), y.dtype).at[sorted_tok].add(y)
+    out = out.reshape(B, S, D).astype(x.dtype)
+    if cfg.num_shared_experts > 0:
+        out = out + swiglu(params["shared"], x)
+    return out
+
+
+def moe_sort_dispatch(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                      sort_fn=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-shard sort-based MoE (exact, gather/scatter based).
+
+    Capacity-free (dropless): every token is processed; expert batches are
+    ragged, realized as one grouped einsum over a (T·K, D) permuted
+    activation with segment boundaries.  See ``sort_route`` for the sort.
+    """
+    E = cfg.num_experts
+    xd, sorted_e, sorted_tok, sorted_p, aux = sort_route(params, cfg, x,
+                                                         sort_fn)
     # ragged expert GEMMs via one-hot masked einsum over experts — on TPU this
     # is a ragged/grouped matmul; here the jnp fallback keeps shapes static.
     seg = jax.nn.one_hot(sorted_e, E, dtype=x.dtype)              # (T·K, E)
     h = jnp.einsum("td,edf,te->tf", xd, params["gate"], seg)
     u = jnp.einsum("td,edf,te->tf", xd, params["up"], seg)
     y = jnp.einsum("tf,efd,te->td", jax.nn.silu(h) * u, params["down"], seg)
-    y = y * sorted_p[:, None].astype(y.dtype)
-
-    out = jnp.zeros((T, D), y.dtype).at[sorted_tok].add(y)
-    out = out.reshape(B, S, D).astype(x.dtype)
-    if cfg.num_shared_experts > 0:
-        out = out + swiglu(params["shared"], x)
-    return out, aux
+    return sort_combine(params, cfg, x, y, sorted_tok, sorted_p), aux
 
 
 def moe_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
@@ -215,4 +234,4 @@ def moe_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
 
 
 __all__ = ["moe_init", "route_topk", "capacity_per_group", "moe_einsum",
-           "moe_sort_dispatch", "moe_apply"]
+           "sort_route", "sort_combine", "moe_sort_dispatch", "moe_apply"]

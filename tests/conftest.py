@@ -5,40 +5,25 @@ must see 1 device; only launch/dryrun.py forces 512 host devices.
 register a minimal stub into ``sys.modules`` so test modules that do
 ``from hypothesis import given`` still *collect*, and every ``@given``
 property test individually skips instead of killing the whole run at
-collection time.
-
-``repro.dist`` is missing from the seed tree (see ROADMAP open items): the
-test modules and tests that need it are skipped — not errored — while the
-gap persists, so the rest of the suite stays runnable under ``-x``.  Both
-guards are keyed on module availability and vanish once the dependency
-exists.
+collection time.  (Property tests that must run regardless detect the stub
+via the missing ``__version__`` and fall back to seeded parametrization —
+see tests/test_dist_properties.py.)
 """
 
-import importlib.util
 import sys
 import types
 
 import pytest
 
-_HAVE_DIST = importlib.util.find_spec("repro.dist") is not None
 
-if not _HAVE_DIST:
-    # these import repro.dist (directly or via repro.train.step /
-    # repro.launch) at module level and cannot collect without it
-    collect_ignore = ["test_analysis.py", "test_dist.py", "test_models.py",
-                      "test_sharding.py", "test_train.py"]
+class ShapeOnlyMesh:
+    """Stand-in for a Mesh wherever only axis *sizes* matter (the
+    sanitize/zero1 spec algebra) — lets those tests run on a 1-device
+    host.  Shared by test_sharding.py and test_dist_properties.py."""
 
-    @pytest.hookimpl(wrapper=True)
-    def pytest_runtest_call(item):
-        # model-stack tests import repro.dist lazily inside the call;
-        # translate exactly that known seed gap into a skip
-        try:
-            return (yield)
-        except ModuleNotFoundError as e:
-            if e.name is not None and e.name.startswith("repro.dist"):
-                raise pytest.skip.Exception(
-                    f"seed gap, see ROADMAP: {e}") from e
-            raise
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
 
 try:
     from hypothesis import HealthCheck, settings

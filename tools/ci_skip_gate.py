@@ -1,0 +1,72 @@
+"""CI gate: summarize a pytest junit XML and fail on excess skips.
+
+Import-level regressions of ``repro.dist`` (or any other package) surface
+as waves of skipped/errored tests; this gate makes them loud.  Usage:
+
+    python tools/ci_skip_gate.py results/tier1.xml --max-skips 5
+
+Writes a pass/fail/skip line to ``$GITHUB_STEP_SUMMARY`` when set, always
+prints it, and exits non-zero if skips exceed the budget (or anything
+failed/errored — pytest already fails the step, this is belt-and-braces).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import xml.etree.ElementTree as ET
+
+
+def summarize(path: str):
+    root = ET.parse(path).getroot()
+    suites = root.iter("testsuite") if root.tag == "testsuites" else [root]
+    tests = failures = errors = skipped = 0
+    reasons = {}
+    for s in suites:
+        tests += int(s.get("tests", 0))
+        failures += int(s.get("failures", 0))
+        errors += int(s.get("errors", 0))
+        skipped += int(s.get("skipped", 0))
+        for case in s.iter("testcase"):
+            sk = case.find("skipped")
+            if sk is not None:
+                msg = sk.get("message", "")[:100]
+                reasons[msg] = reasons.get(msg, 0) + 1
+    passed = tests - failures - errors - skipped
+    return passed, failures, errors, skipped, reasons
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("junit_xml")
+    ap.add_argument("--max-skips", type=int, default=5)
+    ap.add_argument("--label", default="tier-1")
+    args = ap.parse_args()
+
+    passed, failures, errors, skipped, reasons = summarize(args.junit_xml)
+    line = (f"{args.label}: {passed} passed, {failures} failed, "
+            f"{errors} errored, {skipped} skipped "
+            f"(budget {args.max_skips})")
+    print(line)
+    for msg, n in sorted(reasons.items(), key=lambda kv: -kv[1]):
+        print(f"  skip x{n}: {msg}")
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(f"**{line}**\n")
+            for msg, n in sorted(reasons.items(), key=lambda kv: -kv[1]):
+                f.write(f"- skip x{n}: `{msg}`\n")
+
+    if failures or errors:
+        return 1
+    if skipped > args.max_skips:
+        print(f"FAIL: {skipped} skips > budget {args.max_skips} — "
+              "an import-level regression can hide here", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
