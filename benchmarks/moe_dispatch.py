@@ -38,7 +38,7 @@ def run() -> None:
     emit("moe_dispatch/einsum_smoke", t_e, f"ratio_vs_sort={t_e/t_s:.2f}",
          tokens=tokens, ratio_vs_sort=t_e / t_s)
 
-    # the paper's kernel inside the layer: level-batched Pallas merge sort
+    # the paper's kernel inside the layer: the fused radix merge sort
     # (interpret mode — structure/correctness on host, not device speed)
     f_p = jax.jit(lambda p, x: moe_sort_dispatch(p, cfg, x,
                                                  sort_fn="pallas")[0])
@@ -50,6 +50,38 @@ def run() -> None:
     emit("moe_dispatch/sort_pallas_smoke", t_p,
          f"tokens={tokens} matches_jnp_sort={same}",
          tokens=tokens, matches_jnp_sort=same)
+
+    # radix-vs-bitonic inside the layer, cold (trace + compile + run):
+    # the radix tile phase's ~20-op fori_loop body vs the bitonic
+    # network's ~550 unrolled stages is a compile-graph-size win, so the
+    # comparison is first-call wall clock with fresh jit caches
+    import functools
+    import math
+
+    from repro.kernels.merge_sort import argsort as kernel_argsort
+    bits = max(1, math.ceil(math.log2(max(2, cfg.num_experts))))
+    bitonic_sort = functools.partial(kernel_argsort, num_key_bits=bits,
+                                     interpret=True, jit=True,
+                                     method="bitonic")
+    jax.clear_caches()
+    f_p2 = jax.jit(lambda p, x: moe_sort_dispatch(p, cfg, x,
+                                                  sort_fn="pallas")[0])
+    t_p_cold = time_fn(lambda: f_p2(params, x).block_until_ready(),
+                       warmup=0, iters=1)
+    jax.clear_caches()
+    f_pb = jax.jit(lambda p, x: moe_sort_dispatch(p, cfg, x,
+                                                  sort_fn=bitonic_sort)[0])
+    t_pb_cold = time_fn(lambda: f_pb(params, x).block_until_ready(),
+                        warmup=0, iters=1)
+    same_b = bool(np.allclose(np.asarray(f_pb(params, x), np.float32),
+                              np.asarray(f_p(params, x), np.float32),
+                              atol=1e-5))
+    emit("moe_dispatch/sort_pallas_bitonic_cold", t_pb_cold,
+         f"tokens={tokens} matches_radix={same_b}",
+         tokens=tokens, matches_radix=same_b)
+    emit("moe_dispatch/sort_pallas_radix_cold", t_p_cold,
+         f"tokens={tokens} radix_speedup={t_pb_cold/t_p_cold:.2f}x",
+         tokens=tokens, radix_speedup=t_pb_cold / t_p_cold)
 
     # dispatch scaling on the unified Runtime: the T·K routed keys as
     # divisible work, static expert partition vs adaptive stealing — the

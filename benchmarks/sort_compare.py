@@ -10,8 +10,11 @@ The Pallas path is the perf trajectory's hillclimb target: the **before**
 row re-runs the seed's per-pair merge tree (one ``pallas_call`` per tree
 node, whole-array blocks, gather-based bitonic merges) and the **after** row
 runs the level-batched merge-path sort (one launch per level, fixed ≤2·tile
-blocks).  Both rows land in ``BENCH_sort.json``; outputs are checked
-bit-identical.
+blocks).  PR 4 adds the tile-phase hillclimb on top: bitonic network vs
+fused in-kernel LSD radix (``tile_bitonic_before`` / ``tile_radix_after``,
+bit-identical outputs) and the fused pack/unpack launch-count drop of
+``argsort(jit=True)``.  All rows land in ``BENCH_sort.json``; 📌-pinned
+rows are guarded by ``tools/bench_delta.py`` in CI.
 """
 
 from __future__ import annotations
@@ -28,12 +31,15 @@ from repro.core import (CostModel, DepJoinPolicy, JoinPolicy, Runtime,
                         SeqWork, bound_depth, build_plan, even_levels)
 from repro.kernels import merge_sort as ms
 from repro.kernels.merge_sort import argsort as kernel_argsort
+from repro.kernels.radix_sort import radix_tile_sort_packed
 
 from .common import emit, time_fn
 from .sort_adaptors import composed_sort
 
 N = 1 << 20
 N_PALLAS = 1 << 16
+TILE = 1024
+NUM_KEY_BITS = 12
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +155,64 @@ def run() -> None:
          speedup_vs_before=t_before / t_after, bit_identical=identical,
          correct=correct,
          max_block_elems=max(r.max_block_elems for r in tr))
+
+    # --- Radix tile-sort hillclimb (PR 4): the seed's bitonic network
+    # (before) vs the fused in-kernel LSD radix sort (after) on the same
+    # job — 12-bit keys in, sorted packed uint32 tiles out.  Cold wall
+    # clock per run (each interpret-mode call re-traces; that per-launch
+    # overhead is the quantity under test), median of 3.
+    keys12 = jnp.asarray(keys[:N_PALLAS] & ((1 << NUM_KEY_BITS) - 1))
+    idx_bits = (N_PALLAS - 1).bit_length()
+
+    def bitonic_tile_job():
+        packed = (keys12.astype(jnp.uint32) << idx_bits) | \
+            jnp.arange(N_PALLAS, dtype=jnp.uint32)
+        return np.asarray(ms.tile_sort(packed, tile=TILE, interpret=True))
+
+    def radix_tile_job():
+        return np.asarray(radix_tile_sort_packed(
+            keys12, n=N_PALLAS, tile=TILE, num_key_bits=NUM_KEY_BITS,
+            idx_bits=idx_bits, interpret=True))
+
+    tiles_before = bitonic_tile_job()
+    t_tile_bit = time_fn(bitonic_tile_job, warmup=0, iters=3)
+    tiles_after = radix_tile_job()
+    t_tile_rad = time_fn(radix_tile_job, warmup=0, iters=3)
+    tile_identical = bool((tiles_before == tiles_after).all())
+    emit("sort_compare/tile_bitonic_before", t_tile_bit,
+         f"n={N_PALLAS} tile={TILE} num_key_bits={NUM_KEY_BITS}",
+         n=N_PALLAS, tile=TILE, num_key_bits=NUM_KEY_BITS, phase="before",
+         calibration=True)
+    emit("sort_compare/tile_radix_after", t_tile_rad,
+         f"n={N_PALLAS} tile={TILE} num_key_bits={NUM_KEY_BITS} "
+         f"speedup={t_tile_bit/t_tile_rad:.2f}x "
+         f"bit_identical={tile_identical}",
+         n=N_PALLAS, tile=TILE, num_key_bits=NUM_KEY_BITS, phase="after",
+         speedup_vs_bitonic=t_tile_bit / t_tile_rad,
+         bit_identical=tile_identical, pinned=True)
+
+    # --- Fused pack/unpack: end-to-end argsort(jit=True) launch count.
+    # The seed ran pack/unpack as jnp elementwise ops — standalone XLA
+    # launches *outside* the sort kernels, invisible to trace_launches;
+    # fused=False reconstructs them as explicit pallas kernels so the two
+    # elementwise launches are countable.  The fused path runs zero either
+    # way (traced once inside the jit; caches cleared so the trace runs).
+    small_keys = jnp.asarray(keys[:1 << 14] & 0x7FF).astype(jnp.int32)
+    jax.clear_caches()
+    with ms.trace_launches() as tr_fused:
+        of = np.asarray(kernel_argsort(small_keys, tile=TILE,
+                                       interpret=True, jit=True))
+    jax.clear_caches()
+    with ms.trace_launches() as tr_unfused:
+        ou = np.asarray(kernel_argsort(small_keys, tile=TILE,
+                                       interpret=True, jit=True,
+                                       fused=False))
+    drop = len(tr_unfused) - len(tr_fused)
+    emit("sort_compare/argsort_jit_launches", float(len(tr_fused)),
+         f"fused={len(tr_fused)} unfused={len(tr_unfused)} drop={drop} "
+         f"identical={bool((of == ou).all())}",
+         fused_launches=len(tr_fused), unfused_launches=len(tr_unfused),
+         launch_drop=drop, identical=bool((of == ou).all()))
 
     # Parallel scaling (the paper's actual 1.5× claim) on the unified
     # virtual-time runtime: the merge sort's even_levels+bound_depth adaptor

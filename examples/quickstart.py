@@ -60,9 +60,16 @@ print(f"by_blocks(adaptive) early exit: items={found.items_processed} "
 
 # --- 4. the paper's showcase: level-batched stable merge sort ---------------
 # The sort's adaptor stack (even_levels ∘ bound_depth) becomes a static plan
-# whose merge_schedule() drives ONE Pallas launch per merge level —
+# whose sort_schedule() drives ONE Pallas launch per merge level —
 # log2(n/tile) launches, fixed ≤2·tile blocks — instead of one per tree
 # node.  even_levels parity shows up as the halved tile (3 levels → 4).
+# New default (PR 4): the tile phase is an in-kernel LSD radix sort (the
+# schedule's digit-pass metadata, ceil(num_key_bits/r) passes) with the
+# key<<idx_bits|index pack fused into the tile-sort kernel and the final
+# unpack fused into the last merge level — zero standalone elementwise
+# launches.  The seed ran pack/unpack as separate elementwise ops outside
+# the kernels; fused=False reconstructs that pipeline with them as
+# explicit, countable launches (method="bitonic" keeps the seed network).
 import numpy as np
 from repro.kernels.merge_sort import argsort, trace_launches
 
@@ -70,8 +77,11 @@ keys = np.random.RandomState(0).randint(0, 16, 4096).astype(np.int32)
 with trace_launches() as tr:
     order = argsort(jnp.asarray(keys), tile=512, interpret=True)
 assert (np.asarray(order) == np.argsort(keys, kind="stable")).all()
+with trace_launches() as tr_unfused:
+    argsort(jnp.asarray(keys), tile=512, interpret=True, fused=False)
 print(f"merge sort: n=4096 tile=512 -> launches={len(tr)} "
-      f"(1 tile sort + {len(tr) - 1} even merge levels), stable order ok")
+      f"(1 radix tile sort + {len(tr) - 1} even merge levels, pack/unpack "
+      f"fused; unfused would take {len(tr_unfused)}), stable order ok")
 
 # --- 5. the policy driving a JAX training computation ----------------------
 # The same plan machinery decides distribution: microbatch counts come from

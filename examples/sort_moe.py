@@ -30,18 +30,17 @@ flat = experts.reshape(-1)
 print(f"[sort_moe] {flat.shape[0]} (token,expert) assignments over "
       f"{cfg.num_experts} experts; aux load-balance loss = {float(aux):.3f}")
 
-# 2. the paper's stable sort (Pallas kernel) vs the library oracle
-order_kernel = pallas_argsort(flat, tile=512, interpret=True)
+# 2. the paper's stable sort (Pallas kernel) vs the library oracle — the
+# fused radix path: raw expert ids in, order out, pack/unpack in-kernel
+order_kernel = pallas_argsort(flat, tile=512, interpret=True, jit=True)
 order_ref = stable_argsort_reference(flat)
 assert bool(jnp.all(order_kernel == order_ref))
-print("[sort_moe] Pallas merge-sort order == stable oracle ✓")
+print("[sort_moe] Pallas fused radix merge-sort order == stable oracle ✓")
 
 # 3. end-to-end dispatch equivalence (einsum with generous capacity vs sort)
 import dataclasses
 cfg_nodrop = dataclasses.replace(cfg, capacity_factor=8.0)
-out_sorted, _ = moe_sort_dispatch(
-    params, cfg, x, sort_fn=lambda k: pallas_argsort(k, tile=512,
-                                                     interpret=True))
+out_sorted, _ = moe_sort_dispatch(params, cfg, x, sort_fn="pallas")
 out_einsum, _ = moe_einsum(params, cfg_nodrop, x, group_size=128)
 err = float(jnp.max(jnp.abs(out_einsum - out_sorted)))
 print(f"[sort_moe] einsum(no-drop) vs sort dispatch max err = {err:.2e}")

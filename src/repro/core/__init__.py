@@ -24,8 +24,8 @@ from .adaptors import (Adaptor, StealContext, bound_depth, even_levels,
                        force_depth, size_limit, cap, join_context,
                        thief_splitting, BoundDepth, EvenLevels, ForceDepth,
                        SizeLimit, Cap, JoinContext, ThiefSplitting)
-from .plan import (Plan, PlanNode, MergeLevel, build_plan, demand_split,
-                   geometric_blocks)
+from .plan import (Plan, PlanNode, MergeLevel, DigitPass, SortSchedule,
+                   digit_passes, build_plan, demand_split, geometric_blocks)
 from .schedulers import (JoinScheduler, schedule_join, ByBlocks, by_blocks,
                          BlockStats, AdaptiveScheduler, adaptive)
 from .dnc import wrap_iter, WrappedIter, work_loop
@@ -42,8 +42,8 @@ __all__ = [
     "size_limit", "cap", "join_context", "thief_splitting",
     "BoundDepth", "EvenLevels", "ForceDepth", "SizeLimit", "Cap",
     "JoinContext", "ThiefSplitting",
-    "Plan", "PlanNode", "MergeLevel", "build_plan", "demand_split",
-    "geometric_blocks",
+    "Plan", "PlanNode", "MergeLevel", "DigitPass", "SortSchedule",
+    "digit_passes", "build_plan", "demand_split", "geometric_blocks",
     "JoinScheduler", "schedule_join", "ByBlocks", "by_blocks", "BlockStats",
     "AdaptiveScheduler", "adaptive",
     "wrap_iter", "WrappedIter", "work_loop",

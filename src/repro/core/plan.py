@@ -61,6 +61,62 @@ def _underlying(work: Divisible) -> Divisible:
 
 
 @dataclasses.dataclass(frozen=True)
+class DigitPass:
+    """One LSD radix digit pass of a tile-sort phase: rank (and stably
+    permute) by the ``bits``-wide digit at ``shift``.  Pure metadata — the
+    kernel layer turns a tuple of these into one in-kernel ``fori_loop``."""
+
+    shift: int
+    bits: int
+
+    @property
+    def radix(self) -> int:
+        return 1 << self.bits
+
+
+@dataclasses.dataclass(frozen=True)
+class SortSchedule:
+    """A complete sort schedule: the tile-sort phase as LSD digit passes
+    plus the level-synchronous merge schedule.
+
+    ``key_shift`` is the bit position of the sort key inside the packed
+    word (bits below it are tie-order-free: for the fused pack path they
+    hold the in-tile position, which LSD stability preserves without
+    ranking — that is why ``tile_passes`` covers only ``sort_bits`` key
+    bits rather than the full packed width)."""
+
+    tile_passes: Tuple[DigitPass, ...]
+    levels: Tuple["MergeLevel", ...]
+    key_shift: int = 0
+
+    @property
+    def num_passes(self) -> int:
+        return len(self.tile_passes)
+
+    @property
+    def num_launches(self) -> int:
+        """Kernel launches when executed fused: one tile-sort launch (all
+        digit passes run in-kernel) plus one per merge level."""
+        return 1 + len(self.levels)
+
+
+def digit_passes(sort_bits: int, digit_bits: int, *,
+                 key_shift: int = 0) -> Tuple[DigitPass, ...]:
+    """The LSD pass list covering ``sort_bits`` key bits in ``digit_bits``
+    chunks: ``ceil(sort_bits / digit_bits)`` passes, the last one narrower
+    when ``digit_bits`` does not divide ``sort_bits``."""
+    if sort_bits <= 0:
+        return ()
+    if digit_bits <= 0:
+        raise ValueError(f"digit_bits must be positive, got {digit_bits}")
+    out = []
+    for lo in range(0, sort_bits, digit_bits):
+        out.append(DigitPass(shift=key_shift + lo,
+                             bits=min(digit_bits, sort_bits - lo)))
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
 class MergeLevel:
     """One level of a level-synchronous reduction schedule.
 
@@ -158,6 +214,21 @@ class Plan:
                 out.append(MergeLevel(pairs=tuple(
                     (n.left.span(), n.right.span()) for n in internal)))
         return out
+
+    def sort_schedule(self, *, sort_bits: int, digit_bits: int = 4,
+                      key_shift: int = 0) -> SortSchedule:
+        """:meth:`merge_schedule` extended with the tile-sort phase's radix
+        digit-pass metadata (the plan's leaves are the tiles; each digit
+        pass ranks by ``digit_bits`` key bits starting at ``key_shift``).
+        ``sort_bits`` is the key width that actually needs ranking — for
+        the fused pack path that is ``num_key_bits`` alone, because the
+        packed in-tile position bits below ``key_shift`` ride along
+        tie-order-free under a stable LSD pass."""
+        return SortSchedule(
+            tile_passes=digit_passes(sort_bits, digit_bits,
+                                     key_shift=key_shift),
+            levels=tuple(self.merge_schedule()),
+            key_shift=key_shift)
 
     # -- execution helpers ---------------------------------------------------
     def map_reduce(self, map_fn: Callable[[Divisible], Any],
@@ -282,5 +353,5 @@ def geometric_blocks(total: int, *, first: int, growth: float = 2.0,
     return out
 
 
-__all__ = ["Plan", "PlanNode", "MergeLevel", "build_plan", "demand_split",
-           "geometric_blocks"]
+__all__ = ["Plan", "PlanNode", "MergeLevel", "DigitPass", "SortSchedule",
+           "digit_passes", "build_plan", "demand_split", "geometric_blocks"]

@@ -1,0 +1,49 @@
+"""Shared launch accounting for the sort kernels.
+
+``trace_launches`` records every ``pallas_call`` the sort modules issue
+while the context is open (it counts *traced* calls — open the context
+around the first call of a jitted entry point, or around an un-jitted
+one).  Both ``merge_sort`` and ``radix_sort`` report through
+:func:`record`, so a fused pipeline's end-to-end launch count — the
+per-task overhead the perf trajectory tracks — is visible from one place.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class LaunchRecord:
+    kind: str                 # "tile_sort" | "merge_level" | "pack" | "unpack"
+    grid: tuple
+    max_block_elems: int      # largest single in/out block, in elements
+
+
+_TRACE: Optional[List[LaunchRecord]] = None
+
+
+@contextlib.contextmanager
+def trace_launches():
+    """Record every sort-kernel ``pallas_call`` issued while open."""
+    global _TRACE
+    prev, _TRACE = _TRACE, []
+    try:
+        yield _TRACE
+    finally:
+        _TRACE = prev
+
+
+def record(kind: str, grid: Sequence[int],
+           block_shapes: Sequence[Tuple[int, ...]]) -> None:
+    """Append one launch record if a trace is open (no-op otherwise)."""
+    if _TRACE is not None:
+        _TRACE.append(LaunchRecord(
+            kind=kind, grid=tuple(grid),
+            max_block_elems=max(math.prod(b) for b in block_shapes)))
+
+
+__all__ = ["LaunchRecord", "trace_launches", "record"]

@@ -5,79 +5,56 @@ Structure mirrors Kvik's sort, batched level-by-level for a compiled target
 (full design note: ``src/repro/kernels/DESIGN.md``):
 
   1. the input is divided into tiles by a Kvik plan
-     (``even_levels(bound_depth(...))`` — ``even_levels`` keeps the merge
-     level count even, the paper's right-buffer concern),
-  2. each tile is sorted locally by a **bitonic network kernel** whose
-     compare-exchange is pure reshape/min/max (no 1-D gathers — TPU VPU
-     friendly),
+     (``even_levels(bound_depth(...))``), whose
+     :meth:`~repro.core.plan.Plan.sort_schedule` also carries the radix
+     digit-pass metadata for the tile phase,
+  2. each tile is sorted locally by an **in-kernel LSD radix sort**
+     (``radix_sort.py``: r-bit digit passes, masked-cumsum ranks, one-hot
+     matmul placement — no 1-D gathers; the seed's bitonic network kernel
+     remains available as ``tile_sort`` / ``method="bitonic"``),
   3. sorted runs are fused pairwise, **one ``pallas_call`` per merge
-     level**: the plan's :meth:`~repro.core.plan.Plan.merge_schedule` drives
-     a ``grid=(num_pairs, blocks_per_pair)`` launch in which every grid cell
-     produces one fixed ``tile``-sized slice of merged output.  Merge-path
-     (diagonal co-rank binary search) partitioning assigns each cell a
-     ≤ ``tile`` window of each input run, so per-program VMEM stays at
-     2·tile inputs + 1·tile output *independent of n*, and the whole merge
-     tree costs exactly ``log2(n/tile)`` kernel launches instead of the
-     ``n/tile − 1`` per-pair launches of the old tree.
+     level**: ``grid=(num_pairs, blocks_per_pair)`` with merge-path
+     (diagonal co-rank binary search) partitioning, ≤ 2·tile VMEM per
+     program, ``log2(n/tile)`` launches total.  The kernel is lowered for
+     real TPUs: 2-D ``(8, tile//8)`` blocks and the per-block ``la``
+     co-rank scalar delivered in SMEM via ``PrefetchScalarGridSpec``
+     (``interpret=True`` remains the tested default).
 
-Stability: keys are packed as ``key << IDX_BITS | index`` into uint32 before
-sorting — equal keys order by original index, which is what keeps intra-expert
-token order deterministic in MoE dispatch (and what made the paper's sort
-"stable").  Caller-facing API is ``argsort`` (returns the stable order).
+Stability: keys are packed as ``key << idx_bits | index`` into uint32 —
+equal keys order by original index.  ``idx_bits`` is derived per call as
+``ceil(log2(n))`` (``IDX_BITS = 20`` is the documented default cap), so
+small batches admit keys up to ``2^(32 − ceil(log2(n)))``.  On the default
+fused path the pack and the final ``& idx_mask`` unpack live *inside* the
+first tile-sort and last merge-level kernels — ``argsort(jit=True)`` runs
+zero standalone elementwise launches (``fused=False`` reconstructs them as
+separate pack/unpack kernels for comparison; ``trace_launches`` shows the
+two-launch drop).
 """
 
 from __future__ import annotations
 
-import contextlib
-import dataclasses
 import functools
 import math
-from typing import Any, Dict, List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from ..core import SeqWork, bound_depth, build_plan, even_levels
+from .launch_trace import LaunchRecord, record, trace_launches
+from .radix_sort import (SENTINEL, radix_tile_sort,      # noqa: F401 —
+                         radix_tile_sort_packed)         # SENTINEL re-export
 
-IDX_BITS = 20                 # tiles up to 2^20 elements
+IDX_BITS = 20                 # documented default cap: tiles up to 2^20
 IDX_MASK = (1 << IDX_BITS) - 1
-SENTINEL = 0xFFFFFFFF            # sorts after every real packed key
-
-
-# ---------------------------------------------------------------------------
-# launch accounting — lets tests pin the launch count and block footprint
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class LaunchRecord:
-    kind: str                 # "tile_sort" | "merge_level"
-    grid: tuple
-    max_block_elems: int      # largest single in/out block, in elements
-
-
-_TRACE: Optional[List[LaunchRecord]] = None
-
-
-@contextlib.contextmanager
-def trace_launches():
-    """Record every ``pallas_call`` this module issues while the context is
-    open (counts *traced* calls — use on un-jitted entry points)."""
-    global _TRACE
-    prev, _TRACE = _TRACE, []
-    try:
-        yield _TRACE
-    finally:
-        _TRACE = prev
 
 
 def _pallas_call(kernel, *, kind: str, grid, in_specs, out_specs, out_shape,
                  interpret):
-    if _TRACE is not None:
-        blocks = [s.block_shape for s in in_specs] + [out_specs.block_shape]
-        _TRACE.append(LaunchRecord(
-            kind=kind, grid=tuple(grid),
-            max_block_elems=max(math.prod(b) for b in blocks)))
+    record(kind, grid,
+           [s.block_shape for s in in_specs] + [out_specs.block_shape])
     return pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
                           out_specs=out_specs, out_shape=out_shape,
                           interpret=interpret)
@@ -139,26 +116,78 @@ def _tile_sort_kernel(x_ref, o_ref):
     o_ref[...] = _bitonic_sort_network(x_ref[...])
 
 
-def _merge_level_kernel(la_ref, a_ref, b_ref, o_ref):
+def _pack_kernel(k_ref, o_ref, *, n, idx_bits):
+    """Standalone elementwise pack launch (the ``fused=False`` path):
+    ``key << idx_bits | index``, pad slots (index ≥ n) to the sentinel."""
+    m = k_ref.shape[0]
+    idx = jax.lax.broadcasted_iota(jnp.uint32, (m, 1), 0).reshape(m)
+    packed = (k_ref[...].astype(jnp.uint32) << idx_bits) | idx
+    o_ref[...] = jnp.where(idx < n, packed, jnp.uint32(SENTINEL))
+
+
+def _unpack_kernel(x_ref, o_ref, *, idx_mask):
+    """Standalone elementwise unpack launch (the ``fused=False`` path)."""
+    o_ref[...] = (x_ref[...] & jnp.uint32(idx_mask)).astype(jnp.int32)
+
+
+def _elementwise_imap(i):
+    return (0,)
+
+
+def _pack(keys: jnp.ndarray, *, n: int, idx_bits: int,
+          interpret: bool) -> jnp.ndarray:
+    m = keys.shape[0]
+    return _pallas_call(
+        functools.partial(_pack_kernel, n=n, idx_bits=idx_bits),
+        kind="pack", grid=(1,),
+        in_specs=[pl.BlockSpec((m,), _elementwise_imap)],
+        out_specs=pl.BlockSpec((m,), _elementwise_imap),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.uint32),
+        interpret=interpret)(keys)
+
+
+def _unpack(x: jnp.ndarray, *, idx_mask: int, interpret: bool) -> jnp.ndarray:
+    m = x.shape[0]
+    return _pallas_call(
+        functools.partial(_unpack_kernel, idx_mask=idx_mask),
+        kind="unpack", grid=(1,),
+        in_specs=[pl.BlockSpec((m,), _elementwise_imap)],
+        out_specs=pl.BlockSpec((m,), _elementwise_imap),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=interpret)(x)
+
+
+def _merge_level_kernel(la_ref, a_ref, b_ref, o_ref, *, nb, unpack_mask):
     """Merge one fixed tile-sized output block of one run pair.
 
     ``a_ref``/``b_ref`` hold the merge-path windows for this block (≤ tile
     valid elements each, ``la`` of them from A); positions past the valid
     length are masked to the sentinel, the concat(A, reverse(B)) sequence is
-    bitonic, and a gather-free bitonic merge finishes the block.
+    bitonic, and a gather-free bitonic merge finishes the block.  ``la`` is
+    a scalar-prefetch input (SMEM on a real TPU): the whole co-rank table
+    is available before the body runs, indexed by program id.  Blocks are
+    2-D ``(8, tile//8)`` (sublane, lane) when the tile allows.  With
+    ``unpack_mask`` set (last level of a fused argsort) the block is
+    unpacked to the int32 order in-kernel.
     """
-    tile = a_ref.shape[-1]
-    la = la_ref[0, 0]
+    shape = a_ref.shape
+    tile = math.prod(shape)
+    la = la_ref[pl.program_id(0) * nb + pl.program_id(1)]
     idx = jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0).reshape(tile)
-    a = jnp.where(idx < la, a_ref[0, 0, :], jnp.uint32(SENTINEL))
-    b = jnp.where(idx < tile - la, b_ref[0, 0, :], jnp.uint32(SENTINEL))
-    merged = _bitonic_merge_network(jnp.concatenate([a, b[::-1]]))
-    o_ref[0, 0, :] = merged[:tile]
+    a = jnp.where(idx < la, a_ref[...].reshape(tile), jnp.uint32(SENTINEL))
+    b = jnp.where(idx < tile - la, b_ref[...].reshape(tile),
+                  jnp.uint32(SENTINEL))
+    merged = _bitonic_merge_network(jnp.concatenate([a, b[::-1]]))[:tile]
+    if unpack_mask is not None:
+        merged = (merged & jnp.uint32(unpack_mask)).astype(jnp.int32)
+    o_ref[...] = merged.reshape(shape)
 
 
 def tile_sort(x: jnp.ndarray, *, tile: int = 1024,
               interpret: bool = True) -> jnp.ndarray:
-    """Sort each tile of a (n,) uint32 array locally.  n % tile == 0."""
+    """Sort each tile of a (n,) uint32 array locally with the bitonic
+    network (the seed kernel — kept as the radix baseline and fallback).
+    n % tile == 0."""
     n = x.shape[0]
     tile = min(tile, n)
     assert n % tile == 0 and (tile & (tile - 1)) == 0
@@ -229,9 +258,24 @@ def _extract_windows(runs: jnp.ndarray, start: jnp.ndarray,
     return jnp.take_along_axis(src, idx, axis=2)
 
 
-def _merge_level(x: jnp.ndarray, *, run: int, tile: int,
-                 interpret: bool) -> jnp.ndarray:
-    """Merge all adjacent (2·run)-pairs of sorted runs in one pallas_call."""
+def _window_imap_2d(p, b, la):
+    return (p, b, 0, 0)
+
+
+def _window_imap_1d(p, b, la):
+    return (p, b, 0)
+
+
+def _merge_level(x: jnp.ndarray, *, run: int, tile: int, interpret: bool,
+                 unpack_mask: Optional[int] = None) -> jnp.ndarray:
+    """Merge all adjacent (2·run)-pairs of sorted runs in one pallas_call.
+
+    Real-TPU lowering: window blocks are 2-D ``(8, tile//8)`` (sublane,
+    lane) whenever ``tile % 8 == 0``, and the per-block ``la`` co-rank
+    table travels as a scalar-prefetch operand (SMEM) instead of a blocked
+    VMEM input.  ``unpack_mask`` fuses the final ``& idx_mask`` unpack of
+    ``argsort`` into this launch (int32 output).
+    """
     n = x.shape[0]
     assert n % (2 * run) == 0 and run % tile == 0
     num_pairs = n // (2 * run)
@@ -240,17 +284,30 @@ def _merge_level(x: jnp.ndarray, *, run: int, tile: int,
     a_start, b_start, la = _merge_path_starts(ab, run, tile)
     a_win = _extract_windows(ab[:, 0, :], a_start, tile)
     b_win = _extract_windows(ab[:, 1, :], b_start, tile)
-    out = _pallas_call(
-        _merge_level_kernel,
-        kind="merge_level",
+    if tile % 8 == 0:
+        block = (1, 1, 8, tile // 8)
+        imap = _window_imap_2d
+        a_win = a_win.reshape(num_pairs, nb, 8, tile // 8)
+        b_win = b_win.reshape(num_pairs, nb, 8, tile // 8)
+    else:
+        block = (1, 1, tile)
+        imap = _window_imap_1d
+    out_dtype = jnp.uint32 if unpack_mask is None else jnp.int32
+    kernel = functools.partial(_merge_level_kernel, nb=nb,
+                               unpack_mask=unpack_mask)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(num_pairs, nb),
-        in_specs=[pl.BlockSpec((1, 1), lambda p, b: (p, b)),
-                  pl.BlockSpec((1, 1, tile), lambda p, b: (p, b, 0)),
-                  pl.BlockSpec((1, 1, tile), lambda p, b: (p, b, 0))],
-        out_specs=pl.BlockSpec((1, 1, tile), lambda p, b: (p, b, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_pairs, nb, tile), x.dtype),
+        in_specs=[pl.BlockSpec(block, imap), pl.BlockSpec(block, imap)],
+        out_specs=pl.BlockSpec(block, imap),
+    )
+    record("merge_level", (num_pairs, nb), [block, block, block])
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(a_win.shape, out_dtype),
         interpret=interpret,
-    )(la, a_win, b_win)
+    )(la.reshape(-1).astype(jnp.int32), a_win, b_win)
     return out.reshape(n)
 
 
@@ -270,20 +327,11 @@ def merge_pair(a: jnp.ndarray, b: jnp.ndarray, *, tile: int = 1024,
 # composed sort (tile plan + level-batched merge schedule)
 # ---------------------------------------------------------------------------
 
-def sort_u32(x: jnp.ndarray, *, tile: int = 1024,
-             interpret: bool = True) -> jnp.ndarray:
-    """Stable-ready sort of packed uint32 keys: tile sort, then one launch
-    per merge level of the plan's schedule.
-
-    The division is a Kvik plan: ``even_levels(bound_depth(...))`` over the
-    index range — the adaptor stack the paper's sort uses.  ``even_levels``
-    parity is realized on the tile count (halve the tile once so the level
-    count is even), then the plan's :meth:`merge_schedule` drives the levels.
-    """
-    n = x.shape[0]
-    if n & (n - 1):
-        raise ValueError(f"sort_u32 needs a power-of-two input, got n={n} "
-                         "(pad first)")
+def _tile_plan(n: int, tile: int):
+    """The Kvik plan driving the sort: ``even_levels(bound_depth(...))``
+    over the index range.  even_levels parity is realized on the tile count
+    (halve the tile once so the level count is even).  Returns
+    ``(plan, depth, tile)``; plan is None when depth == 0."""
     tile = min(tile, n)
     depth = int(math.log2(n // tile))
     parity_ok = depth % 2 == 0
@@ -291,14 +339,41 @@ def sort_u32(x: jnp.ndarray, *, tile: int = 1024,
         depth += 1          # even merge parity — the paper's even_levels
         tile = n >> depth   # concern, realized on the tile count
         parity_ok = True
-    x = tile_sort(x, tile=tile, interpret=interpret)
     if depth == 0:
-        return x
-
+        return None, 0, tile
     # tile == 1 with odd depth cannot be re-tiled; run the odd schedule
     # rather than let even_levels force division below one element
     work = bound_depth(SeqWork(0, n, align=tile, min_size=tile), depth)
     plan = build_plan(even_levels(work) if parity_ok else work)
+    return plan, depth, tile
+
+
+def sort_u32(x: jnp.ndarray, *, tile: int = 1024, interpret: bool = True,
+             method: str = "radix", total_bits: int = 32,
+             digit_bits: int = 4, group: int = 8) -> jnp.ndarray:
+    """Stable-ready sort of packed uint32 keys: tile sort, then one launch
+    per merge level of the plan's schedule.
+
+    The tile phase defaults to the in-kernel LSD radix sort
+    (``ceil(total_bits / digit_bits)`` digit passes — pass ``total_bits``
+    when the packed width is known, e.g. ``num_key_bits + idx_bits``);
+    ``method="bitonic"`` keeps the seed's O(m·log²m) network.
+    """
+    n = x.shape[0]
+    if n & (n - 1):
+        raise ValueError(f"sort_u32 needs a power-of-two input, got n={n} "
+                         "(pad first)")
+    plan, depth, tile = _tile_plan(n, tile)
+    if method == "radix":
+        x = radix_tile_sort(x, tile=tile, total_bits=total_bits,
+                            digit_bits=digit_bits, group=group,
+                            interpret=interpret)
+    elif method == "bitonic":
+        x = tile_sort(x, tile=tile, interpret=interpret)
+    else:
+        raise ValueError(f"unknown tile-sort method {method!r}")
+    if depth == 0:
+        return x
     schedule = plan.merge_schedule()
     assert len(schedule) == depth
     for level in schedule:
@@ -308,44 +383,88 @@ def sort_u32(x: jnp.ndarray, *, tile: int = 1024,
     return x
 
 
-def _argsort_impl(keys: jnp.ndarray, *, n: int, n_pad: int,
-                  tile: int, interpret: bool) -> jnp.ndarray:
-    packed = (keys.astype(jnp.uint32) << IDX_BITS) | \
-        jnp.arange(n, dtype=jnp.uint32)
+def _argsort_impl(keys: jnp.ndarray, *, n: int, n_pad: int, tile: int,
+                  interpret: bool, num_key_bits: int, idx_bits: int,
+                  method: str, fused: bool, digit_bits: int,
+                  group: int) -> jnp.ndarray:
+    idx_mask = (1 << idx_bits) - 1
+    plan, depth, tile = _tile_plan(n_pad, tile)
+    if fused:
+        # pack lives in the tile-sort kernel; pad keys carry the max key so
+        # they sort to the tile end (the kernel emits sentinels for them)
+        if n_pad != n:
+            pad = jnp.full((n_pad - n,), (1 << num_key_bits) - 1, keys.dtype)
+            keys = jnp.concatenate([keys, pad])
+        schedule = (plan.sort_schedule(sort_bits=num_key_bits,
+                                       digit_bits=digit_bits,
+                                       key_shift=int(math.log2(tile)))
+                    if plan is not None else None)
+        x = radix_tile_sort_packed(
+            keys, n=n, tile=tile, num_key_bits=num_key_bits,
+            idx_bits=idx_bits, digit_bits=digit_bits, group=group,
+            unpack=depth == 0, interpret=interpret,
+            passes=schedule.tile_passes if schedule is not None else None)
+        if depth == 0:
+            return x[:n]
+        levels = schedule.levels
+        for i, level in enumerate(levels):
+            assert level.uniform, "sort plan must divide into uniform runs"
+            x = _merge_level(
+                x, run=level.run_length, tile=tile, interpret=interpret,
+                unpack_mask=idx_mask if i == len(levels) - 1 else None)
+        return x[:n]
+    # unfused: standalone pack/unpack launches around the plain u32 sort
     if n_pad != n:
-        pad = jnp.full((n_pad - n,), SENTINEL, jnp.uint32)
-        packed = jnp.concatenate([packed, pad])
-    out = sort_u32(packed, tile=tile, interpret=interpret)
-    order = (out & IDX_MASK).astype(jnp.int32)
-    return order[:n]
+        keys = jnp.concatenate(
+            [keys, jnp.zeros((n_pad - n,), keys.dtype)])
+    packed = _pack(keys, n=n, idx_bits=idx_bits, interpret=interpret)
+    out = sort_u32(packed, tile=tile, interpret=interpret, method=method,
+                   total_bits=num_key_bits + idx_bits, digit_bits=digit_bits,
+                   group=group)
+    return _unpack(out, idx_mask=idx_mask, interpret=interpret)[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("n", "n_pad", "tile",
-                                             "interpret"))
-def _argsort_jitted(keys, *, n, n_pad, tile, interpret):
-    return _argsort_impl(keys, n=n, n_pad=n_pad, tile=tile,
-                         interpret=interpret)
+_ARGSORT_STATICS = ("n", "n_pad", "tile", "interpret", "num_key_bits",
+                    "idx_bits", "method", "fused", "digit_bits", "group")
+
+
+@functools.partial(jax.jit, static_argnames=_ARGSORT_STATICS)
+def _argsort_jitted(keys, **kw):
+    return _argsort_impl(keys, **kw)
 
 
 def argsort(keys: jnp.ndarray, *, num_key_bits: int = 12, tile: int = 1024,
-            interpret: bool = True, jit: bool = False) -> jnp.ndarray:
+            interpret: bool = True, jit: bool = False, method: str = "radix",
+            fused: Optional[bool] = None, digit_bits: int = 4,
+            group: int = 8) -> jnp.ndarray:
     """Stable argsort of small-integer keys (expert ids) — MoE dispatch entry.
 
     keys: (n,) int32 with values in [0, 2^num_key_bits); n padded to a power
-    of two internally (pad keys sort to the end and are dropped).  With
-    ``jit=True`` the whole pipeline (pack → tile sort → merge levels →
-    unpack) runs as one compiled program, cached per (n, tile).
+    of two internally (pad keys sort to the end and are dropped).
+    ``idx_bits = ceil(log2(n))`` is derived per call, so the hard error only
+    fires when ``num_key_bits + idx_bits > 32`` — packing genuinely cannot
+    fit (``IDX_BITS = 20`` is the documented default: the cap at the default
+    ``num_key_bits=12``).  The default path is the fused radix pipeline
+    (pack inside the tile-sort kernel, unpack inside the last merge level —
+    zero standalone elementwise launches); ``method="bitonic"`` or
+    ``fused=False`` reconstruct the unfused pipeline with explicit
+    pack/unpack launches.  With ``jit=True`` the whole pipeline runs as one
+    compiled program, cached per shape/config.
     """
     n = keys.shape[0]
-    if n > (1 << IDX_BITS):
+    if fused is None:
+        fused = method == "radix"
+    if fused and method != "radix":
+        raise ValueError("fused pack/unpack requires method='radix' "
+                         "(the bitonic network kernel is the unfused "
+                         "baseline)")
+    idx_bits = max(1, (n - 1).bit_length()) if n else 1
+    if num_key_bits + idx_bits > 32:
         raise ValueError(
-            f"argsort supports at most 2^{IDX_BITS} = {1 << IDX_BITS} "
-            f"elements, got n={n}: packed indices would overflow IDX_BITS "
-            "and collide with the keys (raise IDX_BITS / shrink the batch)")
-    if num_key_bits + IDX_BITS > 32:
-        raise ValueError(
-            f"num_key_bits={num_key_bits} does not fit: key and index must "
-            f"pack into 32 bits (num_key_bits + {IDX_BITS} ≤ 32)")
+            f"cannot pack: num_key_bits={num_key_bits} + idx_bits="
+            f"{idx_bits} (= ceil(log2(n)) for n={n}) exceeds 32 — packed "
+            "keys and indices would collide.  Shrink the batch or the key "
+            f"range (n={n} admits keys up to 2^{32 - idx_bits})")
     if not isinstance(keys, jax.core.Tracer):
         kmax = int(jnp.max(keys)) if n else 0
         if kmax >= 1 << num_key_bits:
@@ -356,7 +475,9 @@ def argsort(keys: jnp.ndarray, *, num_key_bits: int = 12, tile: int = 1024,
     n_pad = 1 << math.ceil(math.log2(max(2, n)))
     fn = _argsort_jitted if jit else _argsort_impl
     return fn(jnp.asarray(keys), n=n, n_pad=n_pad, tile=tile,
-              interpret=interpret)
+              interpret=interpret, num_key_bits=num_key_bits,
+              idx_bits=idx_bits, method=method, fused=fused,
+              digit_bits=digit_bits, group=group)
 
 
 __all__ = ["argsort", "sort_u32", "tile_sort", "merge_pair",

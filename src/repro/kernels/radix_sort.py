@@ -1,0 +1,302 @@
+"""In-kernel LSD radix tile sort — the merge sort's tile phase, rebuilt.
+
+The seed tile sort ran an O(m·log²m) bitonic network per tile: at
+``tile=1024`` that is 55 compare-exchange stages — ~550 traced ops per
+kernel body, and trace/compile/dispatch overhead proportional to that is
+exactly the per-task overhead that erases task-parallel speedups
+("Runtime vs Scheduler", PAPERS.md).  This module replaces it with a
+stable LSD radix sort whose whole pass loop is a single in-kernel
+``fori_loop``: ``ceil(sort_bits / r)`` data-parallel passes, each a
+constant ~20 traced ops, no 1-D gathers anywhere.
+
+One pass (``r``-bit digit, radix ``R = 2^r``):
+
+1. **Rank by masked cumulative sum.**  ``onehot[i, d] = [digit_i == d]``
+   (a broadcast compare against a 2-D iota — no gather); an inclusive
+   cumsum down the tile axis counts, for every element, how many earlier
+   elements share its digit; the digit histogram's exclusive scan adds the
+   count of all smaller digits.  ``rank = Σ_d onehot·(incl + excl) − 1``
+   selects both terms in one masked reduction.  Stable by construction:
+   equal digits keep their relative order.
+
+2. **Gather-free placement.**  ``rank`` is a bijection onto ``[0, m)``, so
+   scatter-by-rank is a permutation-matrix product.  A full ``(m, m)``
+   one-hot is memory-hostile; instead ``rank`` splits as ``(row, col) =
+   (rank // C, rank % C)`` and the move becomes one small matmul per
+   payload: ``out[row, col] = Σ_i v_i · rowoh[i, row] · coloh[i, col]``
+   (an MXU-shaped ``(rows, m) × (m, C)`` contraction).  Every output cell
+   receives exactly one element, so f32 accumulation is exact for
+   payloads below 2^24; wider payloads move as two 16-bit halves.
+
+Fused pack (`radix_tile_sort_packed`): the kernel takes *raw keys* and
+emits sorted ``key << idx_bits | global_index`` words — the pack that used
+to be a standalone elementwise launch happens in-kernel.  Fusion also
+makes the sort cheaper, not just launch-leaner: in-tile the index bits are
+the (already ordered) local positions, so a *stable* rank over the key
+digits alone reproduces the packed order exactly — 12-bit keys need
+``ceil(12/r)`` passes instead of ``ceil((12+idx_bits)/r)``.  The moved
+payload is the compact composite ``key·tile + position`` (≤ 24 bits for
+the default ``tile=1024``/``num_key_bits≤14`` — single-einsum placement).
+
+``group`` batches several tiles per grid cell (leading block axis) purely
+to amortize interpret-mode per-op overhead; on a real TPU footprint is
+``group·tile`` words of payload plus the ``(group·tile, R)`` one-hot, so
+keep ``group`` small (default 8 ≈ 2 MB of VMEM at ``tile=1024``).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.plan import digit_passes
+from .launch_trace import record
+
+# the single definition — merge_sort imports it: pad words must compare
+# above every real packed key in both the tile and the merge phases
+SENTINEL = 0xFFFFFFFF
+
+# int16 rank arithmetic holds counts up to 2·tile; keep a wide margin
+_MAX_RADIX_TILE = 1 << 13
+
+
+def _check_tile(tile: int, digit_bits: int) -> None:
+    if tile & (tile - 1):
+        raise ValueError(f"radix tile must be a power of two, got {tile}")
+    if tile > _MAX_RADIX_TILE:
+        raise ValueError(f"radix tile sort supports tile ≤ {_MAX_RADIX_TILE} "
+                         f"(int16 rank arithmetic), got {tile}")
+    if not 1 <= digit_bits <= 8:
+        raise ValueError(f"digit_bits must be in [1, 8], got {digit_bits}")
+
+
+def _pick_group(num_tiles: int, group: int) -> int:
+    return math.gcd(num_tiles, max(1, group))
+
+
+def _placement_split(m: int):
+    """Balanced (rows, cols) factorization of the tile for the rank
+    decomposition — rows·cols == m, both powers of two."""
+    lb = m.bit_length() - 1
+    rows = 1 << (lb // 2)
+    return rows, m // rows
+
+
+def _rank_by_digit(vals: jnp.ndarray, shift, digit_mask,
+                   radix: int) -> jnp.ndarray:
+    """Stable rank of each element of each row by the masked digit at
+    ``shift`` (``digit_mask`` narrows the final pass so bits beyond the
+    sort window never participate — tie order outside it is preserved).
+
+    vals: (G, m) uint32 → (G, m) int16 rank (a per-row permutation).
+    Masked-cumsum formulation: no gathers, one (G, m, R) intermediate.
+    """
+    G, m = vals.shape
+    digit = ((vals >> shift) & digit_mask).astype(jnp.int16)
+    onehot = (digit[..., None] ==
+              jax.lax.broadcasted_iota(jnp.int16, (G, m, radix), 2)
+              ).astype(jnp.int16)
+    incl = jnp.cumsum(onehot, axis=1)                     # within-digit counts
+    counts = incl[:, -1, :].astype(jnp.int32)             # digit histogram
+    excl = (jnp.cumsum(counts, axis=1) - counts).astype(jnp.int16)
+    # one masked reduction selects own-digit (incl − 1) + smaller-digit total
+    return jnp.sum(onehot * (incl + excl[:, None, :]), axis=2) - 1
+
+
+def _placement_onehots(rank: jnp.ndarray, rows: int, cols: int):
+    G, m = rank.shape
+    rowoh = ((rank // cols)[..., None] ==
+             jax.lax.broadcasted_iota(jnp.int16, (G, m, rows), 2)
+             ).astype(jnp.float32)
+    coloh = ((rank % cols)[..., None] ==
+             jax.lax.broadcasted_iota(jnp.int16, (G, m, cols), 2)
+             ).astype(jnp.float32)
+    return rowoh, coloh
+
+
+def _permute_narrow(v: jnp.ndarray, rowoh, coloh) -> jnp.ndarray:
+    """Place values < 2^24 by rank (exact f32, single contraction)."""
+    G, m = v.shape
+    out = jnp.einsum("gmr,gmc->grc", v.astype(jnp.float32)[..., None] * rowoh,
+                     coloh, preferred_element_type=jnp.float32)
+    return out.reshape(G, m).astype(jnp.uint32)
+
+
+def _permute_u32(v: jnp.ndarray, rowoh, coloh) -> jnp.ndarray:
+    """Place full uint32 payloads by rank as two exact 16-bit halves."""
+    lo = _permute_narrow(v & jnp.uint32(0xFFFF), rowoh, coloh)
+    hi = _permute_narrow(v >> 16, rowoh, coloh)
+    return (hi << 16) | lo
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+def _pass_mask(p, digit_bits: int, sort_bits: int):
+    """Digit mask of pass ``p``: full ``digit_bits`` except the final pass,
+    which narrows to the leftover ``sort_bits`` (the ``DigitPass.bits``
+    arithmetic, applied in-kernel so out-of-window bits never rank)."""
+    width = jnp.minimum(jnp.uint32(digit_bits),
+                        jnp.uint32(sort_bits) -
+                        p.astype(jnp.uint32) * digit_bits)
+    return (jnp.uint32(1) << width) - jnp.uint32(1)
+
+
+def _radix_sort_kernel(x_ref, o_ref, *, num_passes, digit_bits, sort_bits,
+                       key_shift):
+    """Generic per-tile stable LSD sort of packed uint32 words by the bits
+    in [key_shift, key_shift + sort_bits)."""
+    G, m = x_ref.shape
+    rows, cols = _placement_split(m)
+    radix = 1 << digit_bits
+
+    def one_pass(p, x):
+        shift = jnp.uint32(key_shift) + p.astype(jnp.uint32) * digit_bits
+        rank = _rank_by_digit(x, shift, _pass_mask(p, digit_bits, sort_bits),
+                              radix)
+        rowoh, coloh = _placement_onehots(rank, rows, cols)
+        return _permute_u32(x, rowoh, coloh)
+
+    o_ref[...] = jax.lax.fori_loop(0, num_passes, one_pass, x_ref[...])
+
+
+def _fused_tile_sort_kernel(k_ref, o_ref, *, n, num_key_bits, idx_bits,
+                            num_passes, digit_bits, sort_bits, unpack):
+    """Fused pack + radix tile sort (+ optional unpack).
+
+    k_ref: (G, tile) int32 raw keys (pad rows carry the max key so they
+    sort last).  The in-kernel payload is the composite ``key·tile + pos``;
+    global packed words (or, with ``unpack``, the int32 order itself) are
+    materialized only at the output write.
+    """
+    G, m = k_ref.shape
+    lb = m.bit_length() - 1
+    rows, cols = _placement_split(m)
+    radix = 1 << digit_bits
+    narrow = lb + num_key_bits <= 24          # composite exact in one einsum
+
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (G, m), 1)
+    c0 = (k_ref[...].astype(jnp.uint32) << lb) | pos
+
+    def one_pass(p, c):
+        # rank on the *key* digits only: the position bits below lb are
+        # already in order, and LSD stability carries them for free
+        shift = jnp.uint32(lb) + p.astype(jnp.uint32) * digit_bits
+        rank = _rank_by_digit(c, shift,
+                              _pass_mask(p, digit_bits, sort_bits), radix)
+        rowoh, coloh = _placement_onehots(rank, rows, cols)
+        perm = _permute_narrow if narrow else _permute_u32
+        return perm(c, rowoh, coloh)
+
+    c = jax.lax.fori_loop(0, num_passes, one_pass, c0)
+
+    base = (pl.program_id(0) * (G * m)).astype(jnp.uint32)
+    gidx = (base + jax.lax.broadcasted_iota(jnp.uint32, (G, m), 0) * m +
+            (c & jnp.uint32(m - 1)))
+    idx_mask = jnp.uint32((1 << idx_bits) - 1)
+    if unpack:
+        o_ref[...] = jnp.where(gidx < n, gidx, idx_mask).astype(jnp.int32)
+    else:
+        packed = ((c >> lb) << idx_bits) | gidx
+        o_ref[...] = jnp.where(gidx < n, packed, jnp.uint32(SENTINEL))
+
+
+def _block_imap(i):
+    return (i, 0)
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def radix_tile_sort(x: jnp.ndarray, *, tile: int = 1024, total_bits: int = 32,
+                    digit_bits: int = 4, key_shift: int = 0, group: int = 8,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Sort each tile of a (n,) uint32 array by the ``total_bits`` bits at
+    ``key_shift`` — stable, so tie order (bits outside the range) is
+    preserved.  Drop-in replacement for the bitonic ``tile_sort``;
+    ``ceil(total_bits / digit_bits)`` passes run inside one launch."""
+    n = x.shape[0]
+    tile = min(tile, n)
+    _check_tile(tile, digit_bits)
+    assert n % tile == 0
+    nt = n // tile
+    g = _pick_group(nt, group)
+    passes = digit_passes(total_bits, digit_bits, key_shift=key_shift)
+    kernel = functools.partial(_radix_sort_kernel, num_passes=len(passes),
+                               digit_bits=digit_bits, sort_bits=total_bits,
+                               key_shift=key_shift)
+    record("tile_sort", (nt // g,), [(g, tile)])
+    out = pl.pallas_call(
+        kernel,
+        grid=(nt // g,),
+        in_specs=[pl.BlockSpec((g, tile), _block_imap)],
+        out_specs=pl.BlockSpec((g, tile), _block_imap),
+        out_shape=jax.ShapeDtypeStruct((nt, tile), x.dtype),
+        interpret=interpret,
+    )(x.reshape(nt, tile))
+    return out.reshape(n)
+
+
+def radix_tile_sort_packed(keys: jnp.ndarray, *, n: int, tile: int,
+                           num_key_bits: int, idx_bits: int,
+                           digit_bits: int = 4, group: int = 8,
+                           unpack: bool = False, passes=None,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Fused pack + tile sort: raw int32 keys (padded to a multiple of
+    ``tile``; pad rows must carry the max key) → per-tile-sorted packed
+    uint32 words ``key << idx_bits | global_index``, pad slots as the
+    sentinel.  With ``unpack=True`` (single-tile pipelines) the kernel
+    emits the int32 order directly — zero standalone elementwise launches
+    on either side.  ``passes`` takes the plan's
+    :meth:`~repro.core.plan.Plan.sort_schedule` digit-pass tuple and is
+    what actually parameterizes the kernel (pass count, digit stride and
+    ranked bit-width all come from it; derived locally when absent)."""
+    n_pad = keys.shape[0]
+    tile = min(tile, n_pad)
+    assert n_pad % tile == 0
+    nt = n_pad // tile
+    g = _pick_group(nt, group)
+    lb = tile.bit_length() - 1
+    if passes is None:
+        passes = digit_passes(num_key_bits, digit_bits, key_shift=lb)
+    passes = tuple(passes)
+    _check_tile(tile, passes[0].bits if passes else digit_bits)
+    if passes and passes[0].shift != lb:
+        # layout invariant, not arithmetic: the composite places the key
+        # at bit log2(tile), so the schedule's key_shift must agree
+        raise ValueError(f"schedule key_shift {passes[0].shift} != "
+                         f"log2(tile) = {lb}")
+    # the kernel strides uniformly by passes[0].bits (only the final pass
+    # may narrow) — reject any other shape instead of silently mis-sorting
+    for i, p in enumerate(passes):
+        if p.shift != passes[0].shift + i * passes[0].bits or \
+                (p.bits != passes[0].bits and i != len(passes) - 1) or \
+                p.bits > passes[0].bits:
+            raise ValueError(
+                f"passes must be contiguous with uniform stride (last may "
+                f"narrow), got {passes}")
+    kernel = functools.partial(
+        _fused_tile_sort_kernel, n=n, num_key_bits=num_key_bits,
+        idx_bits=idx_bits, num_passes=len(passes),
+        digit_bits=passes[0].bits if passes else digit_bits,
+        sort_bits=sum(p.bits for p in passes), unpack=unpack)
+    out_dtype = jnp.int32 if unpack else jnp.uint32
+    record("tile_sort", (nt // g,), [(g, tile)])
+    out = pl.pallas_call(
+        kernel,
+        grid=(nt // g,),
+        in_specs=[pl.BlockSpec((g, tile), _block_imap)],
+        out_specs=pl.BlockSpec((g, tile), _block_imap),
+        out_shape=jax.ShapeDtypeStruct((nt, tile), out_dtype),
+        interpret=interpret,
+    )(keys.reshape(nt, tile))
+    return out.reshape(n_pad)
+
+
+__all__ = ["radix_tile_sort", "radix_tile_sort_packed", "SENTINEL"]

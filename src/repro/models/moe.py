@@ -163,8 +163,13 @@ def sort_route(params: Params, cfg: ModelConfig, x: jnp.ndarray,
     Returns ``(xd, sorted_e, sorted_tok, sorted_p, aux)`` with ``xd`` the
     permuted activations (T·K, D).  ``sort_fn(keys) -> order`` must be a
     *stable* argsort — default ``jnp.argsort(stable=True)``; the string
-    ``"pallas"`` routes through the level-batched Pallas merge sort.  Used
-    by ``moe_sort_dispatch`` and ``repro.dist.expert.moe_shard_map``.
+    ``"pallas"`` routes through the fused radix merge sort: raw expert ids
+    go straight into the kernel (the ``key << idx_bits | index`` pack and
+    the final unpack live inside the tile-sort / last merge-level kernels,
+    so no standalone pack launch runs here or in ``argsort``), and
+    ``jit=True`` caches the compiled pipeline per (T·K, E) shape — the
+    layer no longer re-traces the sort on every call.  Used by
+    ``moe_sort_dispatch`` and ``repro.dist.expert.moe_shard_map``.
     """
     B, S, D = x.shape
     E, K = cfg.num_experts, cfg.top_k
@@ -173,7 +178,7 @@ def sort_route(params: Params, cfg: ModelConfig, x: jnp.ndarray,
         from ..kernels.merge_sort import argsort as kernel_argsort
         bits = max(1, math.ceil(math.log2(max(2, E))))
         sort_fn = functools.partial(kernel_argsort, num_key_bits=bits,
-                                    interpret=True)
+                                    interpret=True, jit=True)
     xf = x.reshape(T, D)
     probs, experts, aux = route_topk(params["router"], xf, K)     # (T,K)
 

@@ -11,6 +11,7 @@ import hypothesis.strategies as st
 
 from repro.kernels import ref
 from repro.kernels import merge_sort
+from repro.kernels import radix_sort
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import combine_partials, flash_decode
 from repro.kernels.merge_sort import argsort, merge_pair, sort_u32, tile_sort
@@ -163,8 +164,8 @@ def test_argsort_stability_heavy_duplicates():
                                     (1 << 16, 1024)])
 def test_merge_tree_launch_count_pinned(n, tile):
     """The merge tree must run in exactly log2(n/tile) pallas_call launches
-    (plus the single tile-sort launch) with every block ≤ 2·tile elements,
-    independent of n — the level-batched structure, pinned."""
+    (plus the single tile-sort launch) with every merge block ≤ 2·tile
+    elements, independent of n — the level-batched structure, pinned."""
     x = jnp.asarray(np.random.RandomState(0).randint(
         0, 2 ** 31, n).astype(np.uint32))
     with merge_sort.trace_launches() as tr:
@@ -174,7 +175,11 @@ def test_merge_tree_launch_count_pinned(n, tile):
     assert kinds.count("tile_sort") == 1
     assert kinds.count("merge_level") == int(math.log2(n // tile))
     assert len(tr) == 1 + int(math.log2(n // tile))
-    assert max(r.max_block_elems for r in tr) <= 2 * tile
+    for rec in tr:
+        if rec.kind == "merge_level":
+            assert rec.max_block_elems <= 2 * tile
+        else:       # radix tile sort groups ≤ 8 tiles per grid cell
+            assert rec.max_block_elems <= 8 * tile
     # level L merges 2^L-tile runs: grid=(num_pairs, blocks_per_pair)
     for L, rec in enumerate(r for r in tr if r.kind == "merge_level"):
         run = tile << L
@@ -247,20 +252,195 @@ def test_argsort_jit_end_to_end():
                                   np.argsort(keys, kind="stable"))
 
 
+# ---------------------------------------------------------------------------
+# radix tile sort + fused pack/unpack (PR 4 tentpole)
+# ---------------------------------------------------------------------------
+
+def _tile_cases(tile, seed=0):
+    """Random, all-equal, and reverse-sorted tiles (the radix-vs-bitonic
+    equivalence sweep the satellite asks for)."""
+    rng = np.random.RandomState(seed)
+    rev = np.arange(4 * tile, 0, -1, dtype=np.uint32)
+    return {
+        "random": rng.randint(0, 2 ** 31, 4 * tile).astype(np.uint32),
+        "dup_heavy": rng.randint(0, 7, 4 * tile).astype(np.uint32),
+        "all_equal": np.full(4 * tile, 123456, np.uint32),
+        "reverse": rev,
+    }
+
+
+@pytest.mark.parametrize("tile", [64, 256, 1024])
+@pytest.mark.parametrize("digit_bits", [2, 4, 8])
+def test_radix_tile_sort_matches_bitonic(tile, digit_bits):
+    """Generic radix tile sort ≡ the bitonic network, bit for bit, on the
+    sweep including all-equal and reverse-sorted tiles."""
+    for name, x in _tile_cases(tile).items():
+        xj = jnp.asarray(x)
+        bit = np.asarray(tile_sort(xj, tile=tile, interpret=True))
+        rad = np.asarray(radix_sort.radix_tile_sort(
+            xj, tile=tile, digit_bits=digit_bits, interpret=True))
+        np.testing.assert_array_equal(rad, bit, err_msg=f"case {name}")
+
+
+def test_radix_tile_sort_packed_rejects_malformed_schedules():
+    """The kernel strides uniformly by the first pass width — schedules it
+    cannot execute must raise, not silently mis-sort."""
+    from repro.core import DigitPass
+    keys = jnp.zeros(16, jnp.int32)
+    kw = dict(n=16, tile=16, num_key_bits=6, idx_bits=4, interpret=True)
+    with pytest.raises(ValueError, match="key_shift"):
+        radix_sort.radix_tile_sort_packed(
+            keys, passes=(DigitPass(0, 4),), **kw)
+    with pytest.raises(ValueError, match="uniform stride"):
+        radix_sort.radix_tile_sort_packed(
+            keys, passes=(DigitPass(4, 2), DigitPass(6, 4)), **kw)
+    with pytest.raises(ValueError, match="uniform stride"):
+        radix_sort.radix_tile_sort_packed(
+            keys, passes=(DigitPass(4, 4), DigitPass(12, 2)), **kw)
+    # the well-formed schedule (narrowed last pass) is accepted
+    out = radix_sort.radix_tile_sort_packed(
+        keys, passes=(DigitPass(4, 4), DigitPass(8, 2)), **kw)
+    assert out.shape == (16,)
+
+
+def test_radix_tile_sort_respects_bit_window():
+    """Bits outside [key_shift, key_shift+total_bits) must not participate
+    in the ordering — the final pass narrows to the leftover bits
+    (regression: a full-width last-pass digit read them)."""
+    # equal low-4-bit digits, differing bit 4: order must be preserved
+    x = jnp.asarray(np.asarray([0x10, 0x00], np.uint32))
+    out = radix_sort.radix_tile_sort(x, tile=2, total_bits=4, digit_bits=8,
+                                     interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), [0x10, 0x00])
+    # a shifted window: sort by bits [4, 8) only, low bits are tie order
+    vals = np.asarray([0x23, 0x12, 0x21, 0x15], np.uint32)
+    out2 = radix_sort.radix_tile_sort(jnp.asarray(vals), tile=4,
+                                      total_bits=4, key_shift=4,
+                                      digit_bits=3, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out2),
+                                  [0x12, 0x15, 0x23, 0x21])
+
+
+@pytest.mark.parametrize("n,tile", [(1024, 256), (4096, 1024)])
+def test_fused_radix_tile_sort_matches_pack_plus_bitonic(n, tile):
+    """Fused pack+radix tile sort ≡ separate pack followed by the bitonic
+    tile sort (bit-identical packed words, sentinel padding included)."""
+    idx_bits = max(1, (n - 1).bit_length())
+    for name, keys in _tile_cases(tile, seed=3).items():
+        keys = (keys[:n] & 0xFFF).astype(np.int32)
+        packed = (keys.astype(np.uint32) << idx_bits) | \
+            np.arange(n, dtype=np.uint32)
+        bit = np.asarray(tile_sort(jnp.asarray(packed), tile=tile,
+                                   interpret=True))
+        fused = np.asarray(radix_sort.radix_tile_sort_packed(
+            jnp.asarray(keys), n=n, tile=tile, num_key_bits=12,
+            idx_bits=idx_bits, interpret=True))
+        np.testing.assert_array_equal(fused, bit, err_msg=f"case {name}")
+
+
+def test_argsort_fused_drops_two_elementwise_launches():
+    """The fused path must run zero standalone pack/unpack launches — the
+    end-to-end launch count drops by exactly those two vs fused=False."""
+    keys = jnp.asarray(np.random.RandomState(0).randint(
+        0, 16, 4096).astype(np.int32))
+    with merge_sort.trace_launches() as tr_fused:
+        a = argsort(keys, tile=512, interpret=True)
+    with merge_sort.trace_launches() as tr_unfused:
+        b = argsort(keys, tile=512, interpret=True, fused=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    kinds_f = [r.kind for r in tr_fused]
+    kinds_u = [r.kind for r in tr_unfused]
+    assert "pack" not in kinds_f and "unpack" not in kinds_f
+    assert kinds_u.count("pack") == 1 and kinds_u.count("unpack") == 1
+    assert len(tr_unfused) - len(tr_fused) == 2
+    # and the jitted fused path traces the same zero-elementwise pipeline
+    jax.clear_caches()
+    with merge_sort.trace_launches() as tr_jit:
+        c = argsort(keys, tile=512, interpret=True, jit=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    assert [r.kind for r in tr_jit] == kinds_f
+
+
+def test_argsort_methods_agree():
+    """radix-fused, radix-unfused, and bitonic argsort agree with the
+    stable oracle on a non-power-of-two, duplicate-heavy input."""
+    keys = np.random.RandomState(9).randint(0, 5, 3000).astype(np.int32)
+    expect = np.argsort(keys, kind="stable")
+    for kw in [dict(), dict(fused=False), dict(method="bitonic")]:
+        order = argsort(jnp.asarray(keys), tile=256, interpret=True, **kw)
+        np.testing.assert_array_equal(np.asarray(order), expect,
+                                      err_msg=str(kw))
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4),
+       st.sampled_from([37, 256, 1000, 2048]))
+@settings(max_examples=20, deadline=None)
+def test_argsort_stability_property(seed, key_bits, n):
+    """Property: equal keys preserve input order (dup-heavy distributions:
+    at most 16 distinct keys over up to 2048 elements)."""
+    keys = np.random.RandomState(seed).randint(
+        0, 1 << key_bits, n).astype(np.int32)
+    order = np.asarray(argsort(jnp.asarray(keys), num_key_bits=key_bits,
+                               tile=256, interpret=True))
+    assert (np.sort(order) == np.arange(n)).all()          # a permutation
+    sorted_keys = keys[order]
+    assert (np.diff(sorted_keys) >= 0).all()               # sorted
+    for k in np.unique(keys):                              # stable
+        pos = order[sorted_keys == k]
+        assert (np.diff(pos) > 0).all(), f"key {k} broke input order"
+
+
+@pytest.mark.parametrize("dist", ["two_vals", "all_equal", "reverse_blocks"])
+def test_argsort_stability_adversarial_distributions(dist):
+    n = 2000
+    if dist == "two_vals":
+        keys = (np.arange(n) % 2).astype(np.int32)
+    elif dist == "all_equal":
+        keys = np.full(n, 7, np.int32)
+    else:
+        keys = np.repeat(np.arange(7, -1, -1), 250).astype(np.int32)
+    order = np.asarray(argsort(jnp.asarray(keys), num_key_bits=4,
+                               tile=256, interpret=True))
+    np.testing.assert_array_equal(order, np.argsort(keys, kind="stable"))
+
+
 def test_argsort_guard_too_many_elements():
+    """The hard error fires only when packing is genuinely impossible:
+    num_key_bits + ceil(log2(n)) > 32.  At the default num_key_bits=12
+    that is exactly n > 2^IDX_BITS = 2^20 (the documented default cap)."""
     n = (1 << merge_sort.IDX_BITS) + 1
-    with pytest.raises(ValueError, match="at most"):
+    with pytest.raises(ValueError, match="cannot pack"):
         argsort(jnp.zeros(n, jnp.int32))
 
 
 def test_argsort_guard_key_overflow():
     with pytest.raises(ValueError, match="collide with the index"):
         argsort(jnp.asarray([1, 1 << 4, 3], dtype=jnp.int32), num_key_bits=4)
-    with pytest.raises(ValueError, match="pack into 32 bits"):
-        argsort(jnp.asarray([0, 1], dtype=jnp.int32), num_key_bits=13)
     # boundary passes: max legal key value sorts fine
     keys = np.asarray([(1 << 4) - 1, 0, (1 << 4) - 1], np.int32)
     order = argsort(jnp.asarray(keys), num_key_bits=4, tile=256,
                     interpret=True)
     np.testing.assert_array_equal(np.asarray(order),
                                   np.argsort(keys, kind="stable"))
+
+
+def test_argsort_idx_bits_derived_per_call():
+    """idx_bits = ceil(log2(n)): small batches admit keys up to
+    2^(32 − ceil(log2(n))) — both sides of the boundary pinned."""
+    # n=1024 → idx_bits=10 → keys up to 2^22 admissible (would have been
+    # rejected under the fixed IDX_BITS=20 packing)
+    keys = np.random.RandomState(0).randint(0, 1 << 22, 1024).astype(np.int32)
+    order = argsort(jnp.asarray(keys), num_key_bits=22, tile=256,
+                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(order),
+                                  np.argsort(keys, kind="stable"))
+    # one element more → idx_bits=11 → 22+11 > 32 → genuinely impossible
+    with pytest.raises(ValueError, match="cannot pack"):
+        argsort(jnp.zeros(1025, jnp.int32), num_key_bits=22)
+    # extreme small-n boundary: two elements admit 31-bit keys…
+    keys2 = np.asarray([(1 << 31) - 1, 0], np.int32)
+    order2 = argsort(jnp.asarray(keys2), num_key_bits=31, interpret=True)
+    np.testing.assert_array_equal(np.asarray(order2), [1, 0])
+    # …but three do not (idx_bits=2)
+    with pytest.raises(ValueError, match="cannot pack"):
+        argsort(jnp.zeros(3, jnp.int32), num_key_bits=31)

@@ -1,11 +1,12 @@
-"""Plan.levels() / merge_schedule(): the level-order API driving the
-level-batched merge kernel (PR 2 tentpole)."""
+"""Plan.levels() / merge_schedule() / sort_schedule(): the level-order API
+driving the level-batched merge kernel (PR 2 tentpole) and the radix
+digit-pass metadata of the tile phase (PR 4 tentpole)."""
 
 import numpy as np
 import pytest
 
-from repro.core import (SeqWork, WorkRange, bound_depth, build_plan,
-                        demand_split, even_levels)
+from repro.core import (DigitPass, SeqWork, WorkRange, bound_depth,
+                        build_plan, demand_split, digit_passes, even_levels)
 
 
 def balanced_plan(n=1024, tile=64):
@@ -81,3 +82,46 @@ def test_merge_schedule_single_leaf_empty():
     assert plan.num_tasks() == 1
     assert plan.merge_schedule() == []
     assert len(plan.levels()) == 1
+
+
+# ---------------------------------------------------------------------------
+# sort_schedule: radix digit-pass metadata (PR 4 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_digit_passes_arithmetic():
+    """ceil-division pass count; the last pass narrows to the leftover
+    bits; shifts start at key_shift and step by digit_bits."""
+    assert digit_passes(12, 4) == (DigitPass(0, 4), DigitPass(4, 4),
+                                   DigitPass(8, 4))
+    assert digit_passes(12, 8) == (DigitPass(0, 8), DigitPass(8, 4))
+    # the unfused packed case from the issue: 12 key bits + 20 index bits
+    # take ceil(32/8) = 4 eight-bit passes
+    assert len(digit_passes(12 + 20, 8)) == 4
+    assert digit_passes(12, 8, key_shift=10) == (DigitPass(10, 8),
+                                                 DigitPass(18, 4))
+    assert digit_passes(0, 4) == ()
+    assert digit_passes(1, 4) == (DigitPass(0, 1),)
+    with pytest.raises(ValueError, match="digit_bits"):
+        digit_passes(12, 0)
+
+
+def test_sort_schedule_carries_passes_and_levels():
+    plan, depth = balanced_plan(n=1024, tile=64)
+    sched = plan.sort_schedule(sort_bits=12, digit_bits=4, key_shift=6)
+    assert sched.num_passes == 3
+    assert all(p.shift == 6 + i * 4 for i, p in
+               enumerate(sched.tile_passes))
+    assert all(p.radix == 16 for p in sched.tile_passes)
+    assert list(sched.levels) == plan.merge_schedule()
+    # fused execution cost: one tile-sort launch + one per merge level
+    assert sched.num_launches == 1 + depth
+
+
+def test_sort_schedule_fused_vs_unfused_pass_count():
+    """Pack fusion halves the ranked width: in-tile the index bits are the
+    already-ordered local positions, so only the key bits need passes."""
+    plan, _ = balanced_plan()
+    fused = plan.sort_schedule(sort_bits=12, digit_bits=4, key_shift=6)
+    unfused = plan.sort_schedule(sort_bits=12 + 20, digit_bits=4)
+    assert fused.num_passes == 3
+    assert unfused.num_passes == 8

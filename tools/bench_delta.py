@@ -1,0 +1,137 @@
+"""Compare freshly-run benchmark JSON against the committed baseline.
+
+    python tools/bench_delta.py results/bench/BENCH_sort.json \
+        [--baseline git:HEAD] [--max-regress 0.25] [--no-normalize]
+
+Rows are matched by ``name``.  Rows whose *baseline* meta carries
+``"pinned": true`` are guarded: a wall-clock regression beyond
+``--max-regress`` (default 25%) fails the run (exit 1).
+
+CI runners and the machine that committed the baseline differ in absolute
+speed, so raw us_per_call ratios conflate hardware with regressions.  By
+default the per-row ratio is therefore normalized by the **median ratio
+across the calibration rows** (baseline meta ``"calibration": true``).
+Tag only wall-clock rows of the *same kind* as the pinned rows (here:
+interpret-mode pallas runs — C-speed library sorts scale differently from
+Python-tracing-bound rows, and deterministic rows like virtual-time
+makespans or launch counts would drag the scale toward 1.0).  A uniform
+hardware delta then cancels, while a
+single pinned row regressing against its peers is exactly what survives.
+Falls back to the median over all matched rows when nothing is tagged;
+``--no-normalize`` compares raw wall clock (same-machine trajectories).
+
+The delta table is printed to stdout and appended to
+``$GITHUB_STEP_SUMMARY`` when set (the CI step summary).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import subprocess
+import sys
+from pathlib import Path
+
+
+def load_rows(payload: dict) -> dict:
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def load_baseline(spec: str, fresh_path: str) -> dict:
+    """``git:REF`` reads the committed copy of ``fresh_path`` at REF;
+    anything else is a filesystem path."""
+    if spec.startswith("git:"):
+        ref = spec[4:]
+        rel = os.path.relpath(fresh_path)
+        out = subprocess.run(
+            ["git", "show", f"{ref}:{rel}"], capture_output=True, text=True)
+        if out.returncode != 0:
+            raise SystemExit(f"bench_delta: cannot read {rel} at {ref}: "
+                             f"{out.stderr.strip()}")
+        return json.loads(out.stdout)
+    return json.loads(Path(spec).read_text())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly-written BENCH_*.json")
+    ap.add_argument("--baseline", default="git:HEAD",
+                    help="baseline: 'git:REF' or a file path (default "
+                         "git:HEAD — the committed trajectory)")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="allowed fractional wall-clock regression of a "
+                         "pinned row (default 0.25)")
+    ap.add_argument("--no-normalize", action="store_true",
+                    help="compare raw wall clock instead of hardware-"
+                         "normalized ratios")
+    args = ap.parse_args(argv)
+
+    fresh = load_rows(json.loads(Path(args.fresh).read_text()))
+    base = load_rows(load_baseline(args.baseline, args.fresh))
+
+    matched = [(name, base[name], fresh[name])
+               for name in base if name in fresh
+               and base[name]["us_per_call"] > 0]
+    if not matched:
+        print("bench_delta: no matching rows — nothing to compare")
+        return 0
+
+    ratios = {name: f["us_per_call"] / b["us_per_call"]
+              for name, b, f in matched}
+    cal = [ratios[name] for name, b, _ in matched
+           if b.get("meta", {}).get("calibration")]
+    scale = 1.0 if args.no_normalize else \
+        statistics.median(cal if cal else list(ratios.values()))
+
+    lines = [f"### bench delta: `{args.fresh}` vs `{args.baseline}` "
+             f"(scale {scale:.2f}× over "
+             f"{len(cal) if cal else len(ratios)} "
+             f"{'calibration' if cal else 'matched'} rows)",
+             "",
+             "| row | base us | fresh us | delta | pinned | status |",
+             "|---|---:|---:|---:|:-:|:-:|"]
+    failures = []
+    for name, b, f in matched:
+        delta = ratios[name] / scale - 1
+        pinned = bool(b.get("meta", {}).get("pinned"))
+        status = "ok"
+        if pinned and delta > args.max_regress:
+            status = "REGRESSED"
+            failures.append((name, delta))
+        lines.append(f"| {name} | {b['us_per_call']:.0f} "
+                     f"| {f['us_per_call']:.0f} | {delta:+.1%} "
+                     f"| {'📌' if pinned else ''} | {status} |")
+    # a pinned baseline row that vanished from the fresh results is a gate
+    # bypass (renamed bench, partial emission, deleted emit), not a pass
+    missing_pinned = sorted(
+        name for name, row in base.items()
+        if row.get("meta", {}).get("pinned") and name not in fresh)
+    for name in missing_pinned:
+        failures.append((name, float("nan")))
+        lines.append(f"| {name} | {base[name]['us_per_call']:.0f} | — | — "
+                     f"| 📌 | MISSING |")
+    new_rows = sorted(set(fresh) - set(base))
+    if new_rows:
+        lines += ["", f"new rows (no baseline): {', '.join(new_rows)}"]
+
+    table = "\n".join(lines)
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as fh:
+            fh.write(table + "\n")
+
+    if failures:
+        print(f"\nbench_delta: {len(failures)} pinned row(s) regressed "
+              f"> {args.max_regress:.0%}: "
+              + ", ".join(f"{n} ({d:+.1%})" for n, d in failures),
+              file=sys.stderr)
+        return 1
+    print(f"\nbench_delta: all pinned rows within {args.max_regress:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
