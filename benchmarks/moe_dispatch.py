@@ -17,7 +17,7 @@ from repro.configs.registry import get_config, get_smoke_config
 from repro.core import (AdaptivePolicy, CostModel, StaticPartitionPolicy,
                         WorkRange, simulate)
 from repro.models.moe import capacity_per_group, moe_einsum, moe_init, \
-    moe_sort_dispatch
+    moe_sort_dispatch, sort_route
 
 from .common import emit, time_fn
 
@@ -50,6 +50,30 @@ def run() -> None:
     emit("moe_dispatch/sort_pallas_smoke", t_p,
          f"tokens={tokens} matches_jnp_sort={same}",
          tokens=tokens, matches_jnp_sort=same)
+
+    # hot (jit-cached) rows, median of 3: dispatch speed with trace/compile
+    # amortized away — the steady-state number a training step sees
+    t_s_hot = time_fn(lambda: f_s(params, x).block_until_ready(),
+                      warmup=1, iters=3)
+    emit("moe_dispatch/sort_smoke_hot", t_s_hot, f"tokens={tokens}",
+         tokens=tokens, hot=True)
+    t_p_hot = time_fn(lambda: f_p(params, x).block_until_ready(),
+                      warmup=1, iters=3)
+    emit("moe_dispatch/sort_pallas_hot", t_p_hot,
+         f"tokens={tokens} ratio_vs_jnp={t_p_hot/t_s_hot:.2f}",
+         tokens=tokens, hot=True, ratio_vs_jnp=t_p_hot / t_s_hot)
+
+    # one-launch dispatch (PR 6): the stable sort by expert id AND the
+    # activation-row gather run inside a single pallas_call — pinned as an
+    # exact integer so CI gates the structure, not a timing
+    from repro.kernels.merge_sort import trace_launches
+    jax.clear_caches()
+    with trace_launches() as trd:
+        sort_route(params, cfg, x, "pallas")
+    emit("moe_dispatch/dispatch_launches", 0.0,
+         f"launches={len(trd)} kinds={[r.kind for r in trd]}",
+         dispatch_launches=len(trd),
+         pinned_ints=["dispatch_launches"])
 
     # radix-vs-bitonic inside the layer, cold (trace + compile + run):
     # the radix tile phase's ~20-op fori_loop body vs the bitonic

@@ -121,17 +121,23 @@ def run() -> None:
 
     # --- Pallas hillclimb: per-pair baseline (before) vs level-batched
     # merge-path (after), interpret mode, cold wall clock (includes trace —
-    # the launch-count overhead *is* the quantity under test)
+    # the launch-count overhead *is* the quantity under test).  Both rows
+    # pin strategy="merge": this comparison is about the merge *tree*'s
+    # execution shape, not the PR 6 multi-tile path (measured below).
     small = jnp.asarray(keys[:N_PALLAS] & 0x7FF)
-    # single cold runs (trace+compile overhead IS the quantity under test),
-    # keeping each run's result; the after-path runs first so the baseline's
-    # interpreter allocations don't pollute its measurement
+    # the after-path runs first so the baseline's interpreter allocations
+    # don't pollute its measurement
     after_res: list = []
     with ms.trace_launches() as tr:
-        t_after = time_fn(
-            lambda: after_res.append(np.asarray(
-                kernel_argsort(small, tile=1024, interpret=True))),
-            warmup=0, iters=1)
+        after_res.append(np.asarray(
+            kernel_argsort(small, tile=1024, interpret=True,
+                           strategy="merge")))
+    # median of 3 cold runs (each call re-traces; PR 4 left this row
+    # unpinned because a single cold run's 2.2–4.6x spread flaked the gate)
+    t_after = time_fn(
+        lambda: np.asarray(kernel_argsort(small, tile=1024, interpret=True,
+                                          strategy="merge")),
+        warmup=0, iters=3)
     order_after = after_res[0]
 
     before_res: list = []
@@ -153,7 +159,7 @@ def run() -> None:
          f"bit_identical={identical} correct={correct}",
          n=N_PALLAS, phase="after", launches=len(tr),
          speedup_vs_before=t_before / t_after, bit_identical=identical,
-         correct=correct,
+         correct=correct, pinned=True,
          max_block_elems=max(r.max_block_elems for r in tr))
 
     # --- Radix tile-sort hillclimb (PR 4): the seed's bitonic network
@@ -201,7 +207,8 @@ def run() -> None:
     jax.clear_caches()
     with ms.trace_launches() as tr_fused:
         of = np.asarray(kernel_argsort(small_keys, tile=TILE,
-                                       interpret=True, jit=True))
+                                       interpret=True, jit=True,
+                                       strategy="merge"))
     jax.clear_caches()
     with ms.trace_launches() as tr_unfused:
         ou = np.asarray(kernel_argsort(small_keys, tile=TILE,
@@ -213,6 +220,57 @@ def run() -> None:
          f"identical={bool((of == ou).all())}",
          fused_launches=len(tr_fused), unfused_launches=len(tr_unfused),
          launch_drop=drop, identical=bool((of == ou).all()))
+
+    # --- Multi-tile LSD radix vs the merge tree (PR 6 tentpole): global
+    # argsort at n=2^18, jit-cached (hot) wall clock, median of 3.  The
+    # merge row is a calibration peer (same kind of interpret-mode pallas
+    # work); the multi-tile row pins the ≥1.5x win.
+    n_mt = 1 << 18
+    keys_mt = jnp.asarray(keys[:n_mt] & ((1 << NUM_KEY_BITS) - 1))
+
+    def mt_job():
+        return np.asarray(kernel_argsort(keys_mt, tile=TILE, interpret=True,
+                                         jit=True, strategy="multi_tile"))
+
+    def merge_job():
+        return np.asarray(kernel_argsort(keys_mt, tile=TILE, interpret=True,
+                                         jit=True, strategy="merge"))
+
+    order_mt = mt_job()                       # compile
+    t_mt = time_fn(mt_job, warmup=0, iters=3)
+    order_mg = merge_job()                    # compile
+    t_mg = time_fn(merge_job, warmup=0, iters=3)
+    mt_identical = bool((order_mt == order_mg).all())
+    emit("sort_compare/merge_tree_argsort_2e18", t_mg,
+         f"n={n_mt} tile={TILE} num_key_bits={NUM_KEY_BITS}",
+         n=n_mt, tile=TILE, num_key_bits=NUM_KEY_BITS, phase="before",
+         calibration=True)
+    emit("sort_compare/multi_tile_argsort_2e18", t_mt,
+         f"n={n_mt} tile={TILE} speedup={t_mg/t_mt:.2f}x "
+         f"bit_identical={mt_identical}",
+         n=n_mt, tile=TILE, num_key_bits=NUM_KEY_BITS, phase="after",
+         speedup_vs_merge=t_mg / t_mt, bit_identical=mt_identical,
+         pinned=True)
+
+    # launch-count independence of n, pinned as exact integers: the
+    # multi-tile count is 3·ceil(num_key_bits/digit_bits) at ANY n, while
+    # the merge tree pays 1 + log2(n/tile)
+    with ms.trace_launches() as mt16:
+        kernel_argsort(small, tile=TILE, interpret=True)
+    with ms.trace_launches() as mt18:
+        kernel_argsort(keys_mt, tile=TILE, interpret=True)
+    with ms.trace_launches() as mg16:
+        kernel_argsort(small, tile=TILE, interpret=True, strategy="merge")
+    merge_launches_mt = 1 + int(math.log2(n_mt // TILE))   # 1 + tree depth
+    emit("sort_compare/multi_tile_launch_counts", 0.0,
+         f"multi_tile n=2^16:{len(mt16)} n=2^18:{len(mt18)} "
+         f"merge n=2^16:{len(mg16)} n=2^18:{merge_launches_mt}",
+         multi_tile_launches_n64k=len(mt16),
+         multi_tile_launches_n256k=len(mt18),
+         merge_launches_n64k=len(mg16),
+         merge_launches_n256k=merge_launches_mt,
+         pinned_ints=["multi_tile_launches_n64k",
+                      "multi_tile_launches_n256k"])
 
     # Parallel scaling (the paper's actual 1.5× claim) on the unified
     # virtual-time runtime: the merge sort's even_levels+bound_depth adaptor

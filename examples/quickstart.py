@@ -58,18 +58,16 @@ found = simulate(WorkRange(0, 99_999),
 print(f"by_blocks(adaptive) early exit: items={found.items_processed} "
       f"wasted={found.wasted_items} of {found.items_total}")
 
-# --- 4. the paper's showcase: level-batched stable merge sort ---------------
-# The sort's adaptor stack (even_levels ∘ bound_depth) becomes a static plan
-# whose sort_schedule() drives ONE Pallas launch per merge level —
-# log2(n/tile) launches, fixed ≤2·tile blocks — instead of one per tree
-# node.  even_levels parity shows up as the halved tile (3 levels → 4).
-# New default (PR 4): the tile phase is an in-kernel LSD radix sort (the
-# schedule's digit-pass metadata, ceil(num_key_bits/r) passes) with the
-# key<<idx_bits|index pack fused into the tile-sort kernel and the final
-# unpack fused into the last merge level — zero standalone elementwise
-# launches.  The seed ran pack/unpack as separate elementwise ops outside
-# the kernels; fused=False reconstructs that pipeline with them as
-# explicit, countable launches (method="bitonic" keeps the seed network).
+# --- 4. the paper's showcase: the stable sort, merge tree killed ------------
+# New default (PR 6): for bounded keys (num_key_bits ≤ 16) argsort runs a
+# MULTI-TILE LSD radix — per digit pass: per-tile stable rank + histogram,
+# a one-launch carry scan of the (num_tiles × R) histogram matrix
+# (kernels/tile_scan.py), and a global scatter.  3·ceil(num_key_bits/4)
+# launches, INDEPENDENT of n (SortSchedule(mode="multi_tile")).  The PR 2/4
+# level-batched merge tree — one launch per merge level, log2(n/tile) of
+# them, radix tile phase with fused pack/unpack — remains the wide-key
+# fallback and is selectable with strategy="merge"; both are stable, so
+# their outputs are bit-identical.
 import numpy as np
 from repro.kernels.merge_sort import argsort, trace_launches
 
@@ -77,11 +75,15 @@ keys = np.random.RandomState(0).randint(0, 16, 4096).astype(np.int32)
 with trace_launches() as tr:
     order = argsort(jnp.asarray(keys), tile=512, interpret=True)
 assert (np.asarray(order) == np.argsort(keys, kind="stable")).all()
-with trace_launches() as tr_unfused:
-    argsort(jnp.asarray(keys), tile=512, interpret=True, fused=False)
-print(f"merge sort: n=4096 tile=512 -> launches={len(tr)} "
-      f"(1 radix tile sort + {len(tr) - 1} even merge levels, pack/unpack "
-      f"fused; unfused would take {len(tr_unfused)}), stable order ok")
+with trace_launches() as tr_mt_big:
+    argsort(jnp.asarray(np.tile(keys, 16)), tile=512, interpret=True)
+with trace_launches() as tr_merge:
+    order_m = argsort(jnp.asarray(keys), tile=512, interpret=True,
+                      strategy="merge")
+assert (np.asarray(order_m) == np.asarray(order)).all()
+print(f"multi-tile radix argsort: n=4096 -> {len(tr)} launches, "
+      f"n=65536 -> {len(tr_mt_big)} (independent of n; merge tree takes "
+      f"{len(tr_merge)} and grows log2(n/tile)), stable order ok")
 
 # --- 5. the policy driving a JAX training computation ----------------------
 # The same plan machinery decides distribution: microbatch counts come from

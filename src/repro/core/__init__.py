@@ -25,7 +25,8 @@ from .adaptors import (Adaptor, StealContext, bound_depth, even_levels,
                        thief_splitting, BoundDepth, EvenLevels, ForceDepth,
                        SizeLimit, Cap, JoinContext, ThiefSplitting)
 from .plan import (Plan, PlanNode, MergeLevel, DigitPass, SortSchedule,
-                   digit_passes, build_plan, demand_split, geometric_blocks)
+                   MULTI_TILE_LAUNCHES_PER_PASS, digit_passes, build_plan,
+                   demand_split, geometric_blocks)
 from .schedulers import (JoinScheduler, schedule_join, ByBlocks, by_blocks,
                          BlockStats, AdaptiveScheduler, adaptive)
 from .dnc import wrap_iter, WrappedIter, work_loop
@@ -43,7 +44,8 @@ __all__ = [
     "BoundDepth", "EvenLevels", "ForceDepth", "SizeLimit", "Cap",
     "JoinContext", "ThiefSplitting",
     "Plan", "PlanNode", "MergeLevel", "DigitPass", "SortSchedule",
-    "digit_passes", "build_plan", "demand_split", "geometric_blocks",
+    "digit_passes", "MULTI_TILE_LAUNCHES_PER_PASS", "build_plan",
+    "demand_split", "geometric_blocks",
     "JoinScheduler", "schedule_join", "ByBlocks", "by_blocks", "BlockStats",
     "AdaptiveScheduler", "adaptive",
     "wrap_iter", "WrappedIter", "work_loop",

@@ -74,20 +74,43 @@ class DigitPass:
         return 1 << self.bits
 
 
+#: launches one multi-tile digit pass costs: local rank/sort, the
+#: cross-tile carry scan of the histogram matrix, and the global scatter.
+MULTI_TILE_LAUNCHES_PER_PASS = 3
+
+
 @dataclasses.dataclass(frozen=True)
 class SortSchedule:
     """A complete sort schedule: the tile-sort phase as LSD digit passes
-    plus the level-synchronous merge schedule.
+    plus either the level-synchronous merge schedule (``mode="merge"``) or
+    the multi-tile pass structure (``mode="multi_tile"``).
 
     ``key_shift`` is the bit position of the sort key inside the packed
     word (bits below it are tie-order-free: for the fused pack path they
-    hold the in-tile position, which LSD stability preserves without
-    ranking — that is why ``tile_passes`` covers only ``sort_bits`` key
-    bits rather than the full packed width)."""
+    hold the in-tile position — and for the multi-tile path the global
+    index — which LSD stability preserves without ranking; that is why
+    ``tile_passes`` covers only ``sort_bits`` key bits rather than the
+    full packed width).
+
+    In ``multi_tile`` mode there are no merge levels: every digit pass is
+    *global* (per-tile histogram + stable local rank, an exclusive scan
+    across the ``(num_tiles × radix)`` histogram matrix, a scatter to
+    global rank), so the launch count is
+    ``MULTI_TILE_LAUNCHES_PER_PASS · num_passes`` — independent of ``n``,
+    versus the merge tree's ``1 + log2(n/tile)``."""
 
     tile_passes: Tuple[DigitPass, ...]
     levels: Tuple["MergeLevel", ...]
     key_shift: int = 0
+    mode: str = "merge"          # "merge" | "multi_tile"
+    num_tiles: int = 1
+
+    def __post_init__(self):
+        if self.mode not in ("merge", "multi_tile"):
+            raise ValueError(f"unknown sort schedule mode {self.mode!r}")
+        if self.mode == "multi_tile" and self.levels:
+            raise ValueError("multi_tile schedules have no merge levels — "
+                             "every digit pass is already global")
 
     @property
     def num_passes(self) -> int:
@@ -95,8 +118,14 @@ class SortSchedule:
 
     @property
     def num_launches(self) -> int:
-        """Kernel launches when executed fused: one tile-sort launch (all
-        digit passes run in-kernel) plus one per merge level."""
+        """Kernel launches when executed fused.  ``merge``: one tile-sort
+        launch (all digit passes run in-kernel) plus one per merge level.
+        ``multi_tile``: rank + carry-scan + scatter per digit pass, with a
+        single-tile input degenerating to the one-launch fused tile sort."""
+        if self.mode == "multi_tile":
+            if self.num_tiles <= 1:
+                return 1
+            return MULTI_TILE_LAUNCHES_PER_PASS * self.num_passes
         return 1 + len(self.levels)
 
 
@@ -216,14 +245,25 @@ class Plan:
         return out
 
     def sort_schedule(self, *, sort_bits: int, digit_bits: int = 4,
-                      key_shift: int = 0) -> SortSchedule:
+                      key_shift: int = 0,
+                      mode: str = "merge") -> SortSchedule:
         """:meth:`merge_schedule` extended with the tile-sort phase's radix
         digit-pass metadata (the plan's leaves are the tiles; each digit
         pass ranks by ``digit_bits`` key bits starting at ``key_shift``).
         ``sort_bits`` is the key width that actually needs ranking — for
         the fused pack path that is ``num_key_bits`` alone, because the
         packed in-tile position bits below ``key_shift`` ride along
-        tie-order-free under a stable LSD pass."""
+        tie-order-free under a stable LSD pass.
+
+        ``mode="multi_tile"`` describes the merge-tree-free execution: the
+        same digit passes, but each one global (histogram / carry scan /
+        scatter) over the plan's ``num_tasks()`` tiles, no merge levels."""
+        if mode == "multi_tile":
+            return SortSchedule(
+                tile_passes=digit_passes(sort_bits, digit_bits,
+                                         key_shift=key_shift),
+                levels=(), key_shift=key_shift, mode="multi_tile",
+                num_tiles=self.num_tasks())
         return SortSchedule(
             tile_passes=digit_passes(sort_bits, digit_bits,
                                      key_shift=key_shift),
@@ -354,4 +394,5 @@ def geometric_blocks(total: int, *, first: int, growth: float = 2.0,
 
 
 __all__ = ["Plan", "PlanNode", "MergeLevel", "DigitPass", "SortSchedule",
-           "digit_passes", "build_plan", "demand_split", "geometric_blocks"]
+           "MULTI_TILE_LAUNCHES_PER_PASS", "digit_passes", "build_plan",
+           "demand_split", "geometric_blocks"]

@@ -44,8 +44,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..core import SeqWork, bound_depth, build_plan, even_levels
 from .launch_trace import LaunchRecord, record, trace_launches
-from .radix_sort import (SENTINEL, radix_tile_sort,      # noqa: F401 —
-                         radix_tile_sort_packed)         # SENTINEL re-export
+from .radix_sort import (SENTINEL, multi_tile_argsort_packed,  # noqa: F401 —
+                         radix_tile_sort,                # SENTINEL re-export
+                         radix_tile_sort_packed)
 
 IDX_BITS = 20                 # documented default cap: tiles up to 2^20
 IDX_MASK = (1 << IDX_BITS) - 1
@@ -386,8 +387,32 @@ def sort_u32(x: jnp.ndarray, *, tile: int = 1024, interpret: bool = True,
 def _argsort_impl(keys: jnp.ndarray, *, n: int, n_pad: int, tile: int,
                   interpret: bool, num_key_bits: int, idx_bits: int,
                   method: str, fused: bool, digit_bits: int,
-                  group: int) -> jnp.ndarray:
+                  group: int, strategy: str = "merge") -> jnp.ndarray:
     idx_mask = (1 << idx_bits) - 1
+    if strategy == "multi_tile":
+        # merge-tree-free path: 3 launches per digit pass (local sort +
+        # histogram, cross-tile carry scan, global scatter), independent of
+        # n.  n_pad is any multiple of the tile — no power-of-two padding.
+        tile_mt = min(tile, n_pad)
+        nt = n_pad // tile_mt
+        if n_pad != n:
+            pad = jnp.full((n_pad - n,), (1 << num_key_bits) - 1, keys.dtype)
+            keys = jnp.concatenate([keys, pad])
+        passes = None
+        if nt > 1 and (nt & (nt - 1)) == 0:
+            # power-of-two tile counts route through the plan so the
+            # schedule metadata (mode, num_tiles, num_launches) is exercised
+            depth = int(math.log2(nt))
+            work = bound_depth(SeqWork(0, n_pad, align=tile_mt,
+                                       min_size=tile_mt), depth)
+            sched = build_plan(work).sort_schedule(
+                sort_bits=num_key_bits, digit_bits=digit_bits,
+                key_shift=idx_bits, mode="multi_tile")
+            passes = sched.tile_passes
+        return multi_tile_argsort_packed(
+            keys, n=n, tile=tile_mt, num_key_bits=num_key_bits,
+            idx_bits=idx_bits, digit_bits=digit_bits, group=group,
+            passes=passes, interpret=interpret)[:n]
     plan, depth, tile = _tile_plan(n_pad, tile)
     if fused:
         # pack lives in the tile-sort kernel; pad keys carry the max key so
@@ -425,7 +450,8 @@ def _argsort_impl(keys: jnp.ndarray, *, n: int, n_pad: int, tile: int,
 
 
 _ARGSORT_STATICS = ("n", "n_pad", "tile", "interpret", "num_key_bits",
-                    "idx_bits", "method", "fused", "digit_bits", "group")
+                    "idx_bits", "method", "fused", "digit_bits", "group",
+                    "strategy")
 
 
 @functools.partial(jax.jit, static_argnames=_ARGSORT_STATICS)
@@ -436,19 +462,31 @@ def _argsort_jitted(keys, **kw):
 def argsort(keys: jnp.ndarray, *, num_key_bits: int = 12, tile: int = 1024,
             interpret: bool = True, jit: bool = False, method: str = "radix",
             fused: Optional[bool] = None, digit_bits: int = 4,
-            group: int = 8) -> jnp.ndarray:
+            group: int = 8, strategy: Optional[str] = None) -> jnp.ndarray:
     """Stable argsort of small-integer keys (expert ids) — MoE dispatch entry.
 
-    keys: (n,) int32 with values in [0, 2^num_key_bits); n padded to a power
-    of two internally (pad keys sort to the end and are dropped).
+    keys: (n,) int32 with values in [0, 2^num_key_bits).
     ``idx_bits = ceil(log2(n))`` is derived per call, so the hard error only
     fires when ``num_key_bits + idx_bits > 32`` — packing genuinely cannot
     fit (``IDX_BITS = 20`` is the documented default: the cap at the default
-    ``num_key_bits=12``).  The default path is the fused radix pipeline
-    (pack inside the tile-sort kernel, unpack inside the last merge level —
-    zero standalone elementwise launches); ``method="bitonic"`` or
-    ``fused=False`` reconstruct the unfused pipeline with explicit
-    pack/unpack launches.  With ``jit=True`` the whole pipeline runs as one
+    ``num_key_bits=12``).
+
+    ``strategy`` picks the global combine:
+
+    * ``"multi_tile"`` (the default for small keys): multi-tile LSD radix —
+      3 launches per digit pass (tile-local sort + histogram, cross-tile
+      carry scan, global scatter), so the launch count depends only on
+      ``num_key_bits``, not ``n``.  Input is padded to a multiple of the
+      tile (pad keys sort to the end and are dropped).
+    * ``"merge"``: the PR 2–4 merge tree — fused radix tile sort, then one
+      launch per merge level (``log2(n/tile)``).  Auto-selected for wide
+      keys (``num_key_bits > 16``), where ``ceil(bits/digit_bits)`` radix
+      passes over the whole array would cost more launches and more data
+      movement than the tree; also the only strategy for ``fused=False`` /
+      ``method="bitonic"`` comparison pipelines.  Pads to a power of two.
+
+    Both strategies are stable sorts of the same keys, so their outputs are
+    bit-identical.  With ``jit=True`` the whole pipeline runs as one
     compiled program, cached per shape/config.
     """
     n = keys.shape[0]
@@ -458,6 +496,14 @@ def argsort(keys: jnp.ndarray, *, num_key_bits: int = 12, tile: int = 1024,
         raise ValueError("fused pack/unpack requires method='radix' "
                          "(the bitonic network kernel is the unfused "
                          "baseline)")
+    if strategy is None:
+        strategy = ("multi_tile" if fused and method == "radix"
+                    and num_key_bits <= 16 else "merge")
+    if strategy not in ("merge", "multi_tile"):
+        raise ValueError(f"unknown argsort strategy {strategy!r}")
+    if strategy == "multi_tile" and (not fused or method != "radix"):
+        raise ValueError("strategy='multi_tile' requires the fused radix "
+                         "pipeline (method='radix', fused=True)")
     idx_bits = max(1, (n - 1).bit_length()) if n else 1
     if num_key_bits + idx_bits > 32:
         raise ValueError(
@@ -472,12 +518,17 @@ def argsort(keys: jnp.ndarray, *, num_key_bits: int = 12, tile: int = 1024,
                 f"keys must be < 2^num_key_bits = {1 << num_key_bits}, got "
                 f"max key {kmax}: packed keys would collide with the index "
                 "bits and silently corrupt the order (raise num_key_bits)")
-    n_pad = 1 << math.ceil(math.log2(max(2, n)))
+    if strategy == "multi_tile":
+        # any whole number of tiles works — no power-of-two padding
+        t_eff = min(tile, 1 << math.ceil(math.log2(max(2, n))))
+        n_pad = -(-max(2, n) // t_eff) * t_eff
+    else:
+        n_pad = 1 << math.ceil(math.log2(max(2, n)))
     fn = _argsort_jitted if jit else _argsort_impl
     return fn(jnp.asarray(keys), n=n, n_pad=n_pad, tile=tile,
               interpret=interpret, num_key_bits=num_key_bits,
               idx_bits=idx_bits, method=method, fused=fused,
-              digit_bits=digit_bits, group=group)
+              digit_bits=digit_bits, group=group, strategy=strategy)
 
 
 __all__ = ["argsort", "sort_u32", "tile_sort", "merge_pair",

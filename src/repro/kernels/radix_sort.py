@@ -86,14 +86,15 @@ def _placement_split(m: int):
     return rows, m // rows
 
 
-def _rank_by_digit(vals: jnp.ndarray, shift, digit_mask,
-                   radix: int) -> jnp.ndarray:
+def _rank_and_counts(vals: jnp.ndarray, shift, digit_mask, radix: int):
     """Stable rank of each element of each row by the masked digit at
     ``shift`` (``digit_mask`` narrows the final pass so bits beyond the
-    sort window never participate — tie order outside it is preserved).
+    sort window never participate — tie order outside it is preserved),
+    plus the per-row digit histogram.
 
-    vals: (G, m) uint32 → (G, m) int16 rank (a per-row permutation).
-    Masked-cumsum formulation: no gathers, one (G, m, R) intermediate.
+    vals: (G, m) uint32 → ((G, m) int16 rank — a per-row permutation —
+    and (G, R) int32 counts).  Masked-cumsum formulation: no gathers, one
+    (G, m, R) intermediate.
     """
     G, m = vals.shape
     digit = ((vals >> shift) & digit_mask).astype(jnp.int16)
@@ -104,7 +105,13 @@ def _rank_by_digit(vals: jnp.ndarray, shift, digit_mask,
     counts = incl[:, -1, :].astype(jnp.int32)             # digit histogram
     excl = (jnp.cumsum(counts, axis=1) - counts).astype(jnp.int16)
     # one masked reduction selects own-digit (incl − 1) + smaller-digit total
-    return jnp.sum(onehot * (incl + excl[:, None, :]), axis=2) - 1
+    rank = jnp.sum(onehot * (incl + excl[:, None, :]), axis=2) - 1
+    return rank, counts
+
+
+def _rank_by_digit(vals: jnp.ndarray, shift, digit_mask,
+                   radix: int) -> jnp.ndarray:
+    return _rank_and_counts(vals, shift, digit_mask, radix)[0]
 
 
 def _placement_onehots(rank: jnp.ndarray, rows: int, cols: int):
@@ -299,4 +306,312 @@ def radix_tile_sort_packed(keys: jnp.ndarray, *, n: int, tile: int,
     return out.reshape(n_pad)
 
 
-__all__ = ["radix_tile_sort", "radix_tile_sort_packed", "SENTINEL"]
+# ---------------------------------------------------------------------------
+# multi-tile LSD radix (PR 6 tentpole): kill the merge tree
+#
+# The merge-tree argsort pays 1 + log2(n/tile) launches.  A *global* LSD
+# radix pays 3·ceil(num_key_bits / digit_bits) — independent of n:
+#
+#   per digit pass
+#     1. local:   per-tile stable sort by the pass digit + per-tile digit
+#                 histogram (one grid launch, the PR 4 rank machinery)
+#     2. scan:    exclusive scan of the (num_tiles × R) histogram matrix
+#                 flattened digit-major → global digit base offsets
+#                 (ONE launch regardless of num_tiles — tile_scan.py's
+#                 cross-tile VMEM carry)
+#     3. scatter: after the local sort each (tile, digit) segment is
+#                 contiguous in BOTH source and destination, so global
+#                 placement is R masked fixed-size window copies per tile
+#                 at dynamic offsets — no 1-D gathers, TPU-lowerable
+#
+# Stability: only the key digit bits are ranked; the packed index bits ride
+# below them, so LSD stability orders equal keys by global index for free.
+# Pad keys carry the max key and land at the global tail.
+# ---------------------------------------------------------------------------
+
+def _mt_local_kernel(x_ref, o_ref, h_ref, *, shift, bits, pack, idx_bits):
+    """One digit pass, tile-local half: stable sort of each tile by the
+    ``bits``-wide digit at ``shift`` plus the per-tile digit histogram.
+    With ``pack`` (first pass) the input is raw int32 keys and the kernel
+    emits ``key << idx_bits | global_index`` words — the pack launch is
+    fused away exactly as in the single-tile pipeline."""
+    G, m = x_ref.shape
+    rows, cols = _placement_split(m)
+    radix = 1 << bits
+    if pack:
+        base = (pl.program_id(0) * (G * m)).astype(jnp.uint32)
+        gidx = (base + jax.lax.broadcasted_iota(jnp.uint32, (G, m), 0) * m +
+                jax.lax.broadcasted_iota(jnp.uint32, (G, m), 1))
+        c = (x_ref[...].astype(jnp.uint32) << idx_bits) | gidx
+    else:
+        c = x_ref[...]
+    rank, counts = _rank_and_counts(c, jnp.uint32(shift),
+                                    jnp.uint32(radix - 1), radix)
+    rowoh, coloh = _placement_onehots(rank, rows, cols)
+    o_ref[...] = _permute_u32(c, rowoh, coloh)
+    h_ref[...] = counts
+
+
+def _mt_scatter_kernel(x_ref, h_ref, b_ref, o_ref, *, radix, unpack_mask):
+    """One digit pass, global half: place every (tile, digit) segment at
+    its global base offset.
+
+    Each fori step copies one fixed ``tile``-sized window from the locally
+    sorted block into the output at a dynamic offset, masked to the
+    segment's true length — lanes past it write back what they read, so
+    every real slot is written exactly once with its final value and the
+    sequential grid/loop order cannot clobber it.  ``unpack_mask`` (last
+    pass) fuses the ``& idx_mask`` unpack in, emitting the int32 order."""
+    g, m = x_ref.shape
+    h2 = h_ref[...]                                   # (g, R) int32
+    ls2 = jnp.cumsum(h2, axis=1) - h2                 # local segment starts
+    h = h2.reshape(g * radix)
+    lstart = ls2.reshape(g * radix)
+    base = b_ref[...].reshape(g * radix)
+    xx = x_ref[...].reshape(g * m)
+    if unpack_mask is not None:
+        xx = (xx & jnp.uint32(unpack_mask)).astype(jnp.int32)
+    # segment reads may run past a row end (masked off below) — pad one tile
+    xx = jnp.concatenate([xx, jnp.zeros((m,), xx.dtype)])
+    idx = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0).reshape(m)
+
+    def body(j, carry):
+        cnt = jax.lax.dynamic_index_in_dim(h, j, keepdims=False)
+        ls = jax.lax.dynamic_index_in_dim(lstart, j, keepdims=False)
+        gb = jax.lax.dynamic_index_in_dim(base, j, keepdims=False)
+        row = j // radix
+        seg = jax.lax.dynamic_slice(xx, (row * m + ls,), (m,))
+        cur = o_ref[pl.ds(gb, m)]
+        o_ref[pl.ds(gb, m)] = jnp.where(idx < cnt, seg, cur)
+        return carry
+
+    jax.lax.fori_loop(0, g * radix, body, 0)
+
+
+def _mt_local(x, *, nt, tile, shift, bits, pack, idx_bits, group, interpret):
+    g = _pick_group(nt, group)
+    radix = 1 << bits
+    kernel = functools.partial(_mt_local_kernel, shift=shift, bits=bits,
+                               pack=pack, idx_bits=idx_bits)
+    record("radix_mt_local", (nt // g,), [(g, tile), (g, radix)])
+    return pl.pallas_call(
+        kernel,
+        grid=(nt // g,),
+        in_specs=[pl.BlockSpec((g, tile), _block_imap)],
+        out_specs=(pl.BlockSpec((g, tile), _block_imap),
+                   pl.BlockSpec((g, radix), _block_imap)),
+        out_shape=(jax.ShapeDtypeStruct((nt, tile), jnp.uint32),
+                   jax.ShapeDtypeStruct((nt, radix), jnp.int32)),
+        interpret=interpret,
+    )(x.reshape(nt, tile))
+
+
+def _mt_scatter(local, hist, base, *, tile, radix, group, interpret,
+                unpack_mask=None):
+    nt = local.shape[0]
+    g = _pick_group(nt, group)
+    n_pad = nt * tile
+    out_dtype = jnp.uint32 if unpack_mask is None else jnp.int32
+    kernel = functools.partial(_mt_scatter_kernel, radix=radix,
+                               unpack_mask=unpack_mask)
+    record("radix_mt_scatter", (nt // g,), [(g, tile), (n_pad + tile,)])
+    out = pl.pallas_call(
+        kernel,
+        grid=(nt // g,),
+        in_specs=[pl.BlockSpec((g, tile), _block_imap),
+                  pl.BlockSpec((g, radix), _block_imap),
+                  pl.BlockSpec((g, radix), _block_imap)],
+        # whole-array output, revisited by every grid step (sequential
+        # masked RMW); one spare tile keeps the last windows in bounds
+        out_specs=pl.BlockSpec((n_pad + tile,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad + tile,), out_dtype),
+        interpret=interpret,
+    )(local, hist, base)
+    return out[:n_pad]
+
+
+def multi_tile_argsort_packed(keys: jnp.ndarray, *, n: int, tile: int,
+                              num_key_bits: int, idx_bits: int,
+                              digit_bits: int = 4, group: int = 8,
+                              scan_block: int = 256, passes=None,
+                              interpret: bool = True) -> jnp.ndarray:
+    """Global stable argsort via multi-tile LSD radix — no merge tree.
+
+    keys: raw int32, padded to a multiple of ``tile`` with the max key (pad
+    slots sort to the global tail).  Returns the full padded int32 order;
+    callers slice ``[:n]``.  Launches: ``3 · num_passes`` (local + carry
+    scan + scatter per digit pass), independent of ``n``; a single-tile
+    input degenerates to the fused one-launch tile sort.  ``passes`` takes
+    the plan's ``sort_schedule(mode="multi_tile")`` digit passes
+    (``key_shift`` must equal ``idx_bits``: digits rank the key bits of the
+    packed word, above the index bits)."""
+    from .tile_scan import histogram_offsets
+
+    n_pad = keys.shape[0]
+    tile = min(tile, n_pad)
+    assert n_pad % tile == 0
+    nt = n_pad // tile
+    if nt == 1:
+        return radix_tile_sort_packed(
+            keys, n=n, tile=tile, num_key_bits=num_key_bits,
+            idx_bits=idx_bits, digit_bits=digit_bits, group=group,
+            unpack=True, interpret=interpret)
+    if passes is None:
+        passes = digit_passes(num_key_bits, digit_bits, key_shift=idx_bits)
+    passes = tuple(passes)
+    if not passes:
+        raise ValueError("multi-tile argsort needs at least one digit pass")
+    if passes[0].shift != idx_bits:
+        raise ValueError(f"schedule key_shift {passes[0].shift} != "
+                         f"idx_bits = {idx_bits}")
+    _check_tile(tile, max(p.bits for p in passes))
+    idx_mask = (1 << idx_bits) - 1
+    x = keys
+    for i, p in enumerate(passes):
+        local, hist = _mt_local(
+            x, nt=nt, tile=tile, shift=p.shift, bits=p.bits, pack=(i == 0),
+            idx_bits=idx_bits, group=group, interpret=interpret)
+        base = histogram_offsets(hist, block=scan_block, interpret=interpret)
+        x = _mt_scatter(
+            local, hist, base, tile=tile, radix=1 << p.bits, group=group,
+            interpret=interpret,
+            unpack_mask=idx_mask if i == len(passes) - 1 else None)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# one-launch MoE dispatch: sort + gather fused into a single pallas_call
+# ---------------------------------------------------------------------------
+
+def _moe_dispatch_kernel(a_ref, o_ref, hist_ref, offs_ref, *, radix, d_col):
+    """Two-sweep grid ``(2, nt)`` over the augmented row matrix
+    ``A = [activations | e | p | tok]`` (f32; the expert id rides in column
+    ``d_col``).
+
+    Sweep 0 fills the ``(nt, R)`` histogram scratch.  Step (1, 0) turns it
+    into global digit base offsets (digit-major exclusive scan — the
+    ``histogram_offsets`` arithmetic, inline on scratch since the whole
+    matrix is already in VMEM).  Sweep 1 stably sorts each tile's rows by
+    expert digit (one-hot matmul row permutation — exact: every output row
+    receives exactly one source row) and window-scatters the (tile, digit)
+    segments at their global offsets, exactly like ``_mt_scatter_kernel``
+    but moving whole rows.  One digit pass suffices because ``E ≤ radix``."""
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    m, C = a_ref.shape
+    av = a_ref[...]
+    e = av[:, d_col].astype(jnp.uint32).reshape(1, m)
+    rank, counts = _rank_and_counts(e, jnp.uint32(0),
+                                    jnp.uint32(radix - 1), radix)
+
+    @pl.when(s == 0)
+    def _():
+        hist_ref[pl.ds(t, 1), :] = counts
+
+    @pl.when((s == 1) & (t == 0))
+    def _():
+        h = hist_ref[...]                             # (nt, R)
+        flat = h.T.reshape(-1)                        # digit-major
+        excl = jnp.cumsum(flat) - flat
+        offs_ref[...] = excl.reshape(radix, -1).T
+
+    @pl.when(s == 1)
+    def _():
+        # stable local sort of the rows: out[r, :] = A[rank⁻¹(r), :]
+        poh = (rank.reshape(m)[:, None] ==
+               jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+               ).astype(jnp.float32)
+        rows = jnp.einsum("ir,ic->rc", poh, av,
+                          preferred_element_type=jnp.float32)
+        h = counts.reshape(radix)
+        lstart = jnp.cumsum(h) - h
+        base = offs_ref[pl.ds(t, 1), :].reshape(radix)
+        xx = jnp.concatenate([rows, jnp.zeros((m, C), rows.dtype)])
+        idx = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0).reshape(m)
+
+        def body(d, carry):
+            cnt = jax.lax.dynamic_index_in_dim(h, d, keepdims=False)
+            ls = jax.lax.dynamic_index_in_dim(lstart, d, keepdims=False)
+            gb = jax.lax.dynamic_index_in_dim(base, d, keepdims=False)
+            seg = jax.lax.dynamic_slice(xx, (ls, 0), (m, C))
+            cur = o_ref[pl.ds(gb, m), :]
+            o_ref[pl.ds(gb, m), :] = jnp.where(idx[:, None] < cnt, seg, cur)
+            return carry
+
+        jax.lax.fori_loop(0, radix, body, 0)
+
+
+def _moe_dispatch_impl(a, *, nt, tile, radix, d_col, interpret):
+    from jax.experimental.pallas import tpu as pltpu
+    n_pad, C = a.shape
+    kernel = functools.partial(_moe_dispatch_kernel, radix=radix, d_col=d_col)
+    record("moe_dispatch", (2, nt), [(tile, C), (n_pad + tile, C)])
+    out = pl.pallas_call(
+        kernel,
+        grid=(2, nt),
+        in_specs=[pl.BlockSpec((tile, C), lambda s, t: (t, 0))],
+        out_specs=pl.BlockSpec((n_pad + tile, C), lambda s, t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad + tile, C), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((nt, radix), jnp.int32),
+                        pltpu.VMEM((nt, radix), jnp.int32)],
+        interpret=interpret,
+    )(a)
+    return out
+
+
+_MOE_DISPATCH_STATICS = ("nt", "tile", "radix", "d_col", "interpret")
+_moe_dispatch_jitted = functools.partial(
+    jax.jit, static_argnames=_MOE_DISPATCH_STATICS)(_moe_dispatch_impl)
+
+
+def moe_dispatch_sort(x: jnp.ndarray, experts: jnp.ndarray,
+                      probs: jnp.ndarray, *, num_experts: int,
+                      tile: int = 512, interpret: bool = True,
+                      jit: bool = True):
+    """One-``pallas_call`` MoE routing: stable sort of the (T·K,) expert
+    assignments WITH the activation rows carried along — the
+    ``xf[sorted_tok]`` gather of the old pipeline happens inside the final
+    scatter, so dispatch is a single kernel launch at any T.
+
+    x: (T, D) activations; experts/probs: (T, K) from ``route_topk``.
+    Returns ``(xd (T·K, D), sorted_e, sorted_tok, sorted_p)`` — bit-identical
+    to the argsort + gather path (f32 row moves are exact: one-hot
+    permutations place each value once; ids/positions are < 2^24).
+    Requires ``num_experts ≤ 256`` (one ≤ 9-bit digit pass; the sentinel
+    digit ``E`` marks pad rows, which sort to the tail and are sliced off).
+    """
+    T, D = x.shape
+    K = experts.shape[-1]
+    E = num_experts
+    if E > 256:
+        raise ValueError(f"one-launch dispatch needs num_experts ≤ 256, "
+                         f"got {E} (fall back to argsort + gather)")
+    n = T * K
+    bits = max(1, math.ceil(math.log2(E + 1)))    # digit E = pad sentinel
+    radix = 1 << bits
+    tile = min(tile, 1 << max(1, math.ceil(math.log2(max(2, n)))))
+    n_pad = -(-n // tile) * tile
+
+    xr = jnp.repeat(x.astype(jnp.float32), K, axis=0)       # (T·K, D)
+    cols = [xr,
+            experts.reshape(n, 1).astype(jnp.float32),
+            probs.reshape(n, 1).astype(jnp.float32),
+            jnp.repeat(jnp.arange(T, dtype=jnp.float32), K).reshape(n, 1)]
+    a = jnp.concatenate(cols, axis=1)
+    if n_pad != n:
+        pad = jnp.zeros((n_pad - n, D + 3), jnp.float32)
+        pad = pad.at[:, D].set(float(E))                    # sentinel digit
+        a = jnp.concatenate([a, pad])
+
+    fn = _moe_dispatch_jitted if jit else _moe_dispatch_impl
+    out = fn(a, nt=n_pad // tile, tile=tile, radix=radix, d_col=D,
+             interpret=interpret)[:n]
+    xd = out[:, :D].astype(x.dtype)
+    sorted_e = out[:, D].astype(jnp.int32)
+    sorted_p = out[:, D + 1].astype(probs.dtype)
+    sorted_tok = out[:, D + 2].astype(jnp.int32)
+    return xd, sorted_e, sorted_tok, sorted_p
+
+
+__all__ = ["radix_tile_sort", "radix_tile_sort_packed",
+           "multi_tile_argsort_packed", "moe_dispatch_sort", "SENTINEL"]

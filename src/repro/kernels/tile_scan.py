@@ -1,0 +1,111 @@
+"""Single-launch tile scan with cross-tile carry — the shared machinery.
+
+A scan of ``n`` elements on a launch-per-node tree costs ``log n`` kernel
+launches; on TPU the grid of one ``pallas_call`` already executes
+*sequentially*, so a carry held in VMEM scratch turns the whole scan into
+ONE launch: each grid step loads its block, combines the incoming carry
+with a block-local scan, writes the block's result, and folds the block
+total into the carry for the next step.  This is the "tile-local scan +
+cross-tile carry" pattern the multi-tile radix sort uses to turn the
+``(num_tiles, R)`` digit-histogram matrix into global base offsets
+(``radix_sort.py``), and the same machinery a chunked associative scan for
+the SSM recurrence needs (ROADMAP item 5) — hence the generic ``combine``
+/ ``unit`` monoid interface rather than a hard-coded sum.
+
+Restrictions: ``combine`` must be associative with identity ``unit`` (the
+scan is a left fold of carries, so commutativity is NOT required), and the
+carry must have the same dtype/shape as one element.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .launch_trace import record
+
+Combine = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def _scan_kernel(x_ref, o_ref, carry_ref, *, combine, unit, inclusive):
+    """One block of the scan.  ``carry_ref`` (VMEM scratch, shape (1, 1))
+    persists across the sequential grid steps and holds the fold of every
+    earlier block."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _():
+        carry_ref[...] = jnp.full_like(carry_ref, unit)
+
+    x = x_ref[...]                                  # (1, block)
+    incl = jax.lax.associative_scan(combine, x, axis=1)
+    carry = carry_ref[0, 0]
+    if inclusive:
+        local = incl
+    else:
+        # exclusive = inclusive shifted right with the identity in front
+        local = jnp.concatenate(
+            [jnp.full((1, 1), unit, x.dtype), incl[:, :-1]], axis=1)
+    o_ref[...] = combine(jnp.full_like(local, carry), local)
+    carry_ref[0, 0] = combine(carry, incl[0, -1])
+
+
+def tile_scan(x: jnp.ndarray, *, block: int = 256,
+              combine: Optional[Combine] = None, unit=0,
+              inclusive: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """Exclusive (default) or inclusive scan of a 1-D array in ONE launch.
+
+    ``combine``/``unit`` default to ``(+, 0)``.  The grid iterates blocks in
+    order; the cross-block carry lives in a (1, 1) VMEM scratch cell, so the
+    launch count is 1 regardless of ``n`` — the property the multi-tile
+    radix sort (and every bench row pinned on launch counts) relies on.
+    """
+    if combine is None:
+        combine = jnp.add
+    n = x.shape[0]
+    if n == 0:
+        return x
+    block = max(1, min(block, n))
+    n_pad = -(-n // block) * block
+    if n_pad != n:
+        # identity padding: the tail never affects carries ahead of it and
+        # padded outputs are sliced off
+        x = jnp.concatenate([x, jnp.full((n_pad - n,), unit, x.dtype)])
+    nb = n_pad // block
+    kernel = functools.partial(_scan_kernel, combine=combine, unit=unit,
+                               inclusive=inclusive)
+    record("tile_scan", (nb,), [(1, block)])
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, 1), x.dtype)],
+        interpret=interpret,
+    )(x.reshape(nb, block))
+    return out.reshape(n_pad)[:n]
+
+
+def histogram_offsets(hist: jnp.ndarray, *, block: int = 256,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Global base offsets from a ``(num_tiles, R)`` digit-histogram matrix.
+
+    ``offsets[t, d]`` = #(elements with digit < d anywhere) + #(elements
+    with digit d in tiles before ``t``) — the destination of tile ``t``'s
+    first digit-``d`` element in a stable multi-tile counting pass.  That
+    is exactly the exclusive scan of the histogram flattened digit-major
+    (transpose → scan → transpose back), one ``tile_scan`` launch.
+    """
+    nt, r = hist.shape
+    flat = hist.T.reshape(nt * r)
+    scanned = tile_scan(flat, block=block, interpret=interpret)
+    return scanned.reshape(r, nt).T
+
+
+__all__ = ["tile_scan", "histogram_offsets"]

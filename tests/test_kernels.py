@@ -344,7 +344,7 @@ def test_argsort_fused_drops_two_elementwise_launches():
     keys = jnp.asarray(np.random.RandomState(0).randint(
         0, 16, 4096).astype(np.int32))
     with merge_sort.trace_launches() as tr_fused:
-        a = argsort(keys, tile=512, interpret=True)
+        a = argsort(keys, tile=512, interpret=True, strategy="merge")
     with merge_sort.trace_launches() as tr_unfused:
         b = argsort(keys, tile=512, interpret=True, fused=False)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -356,7 +356,8 @@ def test_argsort_fused_drops_two_elementwise_launches():
     # and the jitted fused path traces the same zero-elementwise pipeline
     jax.clear_caches()
     with merge_sort.trace_launches() as tr_jit:
-        c = argsort(keys, tile=512, interpret=True, jit=True)
+        c = argsort(keys, tile=512, interpret=True, jit=True,
+                    strategy="merge")
     np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
     assert [r.kind for r in tr_jit] == kinds_f
 
@@ -444,3 +445,100 @@ def test_argsort_idx_bits_derived_per_call():
     # …but three do not (idx_bits=2)
     with pytest.raises(ValueError, match="cannot pack"):
         argsort(jnp.zeros(3, jnp.int32), num_key_bits=31)
+
+
+# ---------------------------------------------------------------------------
+# multi-tile LSD radix (PR 6 tentpole): merge-tree-free global argsort
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1 << 13, 1 << 15, 1 << 16])
+def test_multi_tile_launch_count_independent_of_n(n):
+    """The multi-tile argsort must run exactly 3 launches per digit pass
+    (local sort+histogram, carry scan, scatter) at ANY n — launch count a
+    function of num_key_bits only, never of n.  Pinned per kind."""
+    keys = jnp.asarray(np.random.RandomState(0).randint(
+        0, 1 << 12, n).astype(np.int32))
+    with merge_sort.trace_launches() as tr:
+        out = argsort(keys, tile=1024, interpret=True,
+                      strategy="multi_tile")
+    np.testing.assert_array_equal(
+        np.asarray(out), np.argsort(np.asarray(keys), kind="stable"))
+    kinds = [r.kind for r in tr]
+    num_passes = 3                       # ceil(12 key bits / 4 digit bits)
+    assert kinds == ["radix_mt_local", "tile_scan",
+                     "radix_mt_scatter"] * num_passes
+    assert len(tr) == 3 * num_passes     # == SortSchedule.num_launches
+    for rec in tr:
+        if rec.kind in ("radix_mt_local", "radix_mt_scatter"):
+            # grouped tile blocks, never whole-array inputs
+            assert rec.grid[0] >= max(1, (n // 1024) // 8)
+
+
+@pytest.mark.parametrize("n", [1 << 12, 3 * 1024, 5000, 1 << 16, 77, 1000])
+def test_multi_tile_bit_identical_to_merge_tree(n):
+    """Both strategies are stable sorts of the same keys, so the orders
+    must be bit-identical — across random / dup-heavy / all-equal /
+    reverse inputs including non-power-of-two n."""
+    rng = np.random.RandomState(n)
+    cases = {
+        "random": rng.randint(0, 1 << 12, n).astype(np.int32),
+        "dup_heavy": rng.randint(0, 7, n).astype(np.int32),
+        "all_equal": np.full(n, (1 << 12) - 1, np.int32),
+        "reverse": (np.arange(n, 0, -1) % (1 << 12)).astype(np.int32),
+    }
+    for name, keys in cases.items():
+        jk = jnp.asarray(keys)
+        mt = np.asarray(argsort(jk, interpret=True, strategy="multi_tile"))
+        mg = np.asarray(argsort(jk, interpret=True, strategy="merge"))
+        np.testing.assert_array_equal(mt, mg, err_msg=f"case {name} n={n}")
+        np.testing.assert_array_equal(
+            mt, np.argsort(keys, kind="stable"), err_msg=f"case {name}")
+
+
+def test_argsort_strategy_auto_selection():
+    """Small keys default to multi_tile; wide keys (> 16 bits) fall back
+    to the merge tree; incompatible pipelines are rejected."""
+    keys = jnp.asarray(np.random.RandomState(1).randint(
+        0, 16, 4096).astype(np.int32))
+    with merge_sort.trace_launches() as tr_small:
+        argsort(keys, interpret=True)
+    assert "radix_mt_local" in {r.kind for r in tr_small}
+    wide = jnp.asarray(np.random.RandomState(1).randint(
+        0, 1 << 17, 2048).astype(np.int32))
+    with merge_sort.trace_launches() as tr_wide:
+        argsort(wide, num_key_bits=17, interpret=True)
+    kinds = {r.kind for r in tr_wide}
+    assert "merge_level" in kinds and "radix_mt_local" not in kinds
+    with pytest.raises(ValueError, match="multi_tile"):
+        argsort(keys, strategy="multi_tile", fused=False)
+    with pytest.raises(ValueError, match="multi_tile"):
+        argsort(keys, strategy="multi_tile", method="bitonic")
+    with pytest.raises(ValueError, match="strategy"):
+        argsort(keys, strategy="quantum")
+
+
+def test_moe_dispatch_sort_single_launch_and_exact():
+    """The fused dispatch kernel: one pallas_call, and every output —
+    permuted activation rows included — bit-identical to stable argsort +
+    gather."""
+    from repro.kernels.radix_sort import moe_dispatch_sort
+    rng = np.random.RandomState(7)
+    T, K, E, D = 100, 2, 16, 32
+    x = rng.randn(T, D).astype(np.float32)
+    e = rng.randint(0, E, (T, K)).astype(np.int32)
+    p = rng.rand(T, K).astype(np.float32)
+    with merge_sort.trace_launches() as tr:
+        xd, se, st, sp = moe_dispatch_sort(
+            jnp.asarray(x), jnp.asarray(e), jnp.asarray(p),
+            num_experts=E, tile=64, jit=False)
+    assert [r.kind for r in tr] == ["moe_dispatch"]
+    fe, fp = e.reshape(-1), p.reshape(-1)
+    tok = np.repeat(np.arange(T), K)
+    order = np.argsort(fe, kind="stable")
+    np.testing.assert_array_equal(np.asarray(se), fe[order])
+    np.testing.assert_array_equal(np.asarray(st), tok[order])
+    np.testing.assert_array_equal(np.asarray(sp), fp[order])
+    np.testing.assert_array_equal(np.asarray(xd), x[tok[order]])
+    with pytest.raises(ValueError, match="256"):
+        moe_dispatch_sort(jnp.asarray(x), jnp.asarray(e), jnp.asarray(p),
+                          num_experts=300)

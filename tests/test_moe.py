@@ -80,3 +80,28 @@ def test_shared_expert_always_applies():
     out, _ = moe_einsum(params, cfg, x)
     # zero input → zero output regardless of routing (sanity)
     assert float(jnp.abs(out).max()) < 1e-5
+
+
+def test_pallas_dispatch_is_one_launch_and_matches_jnp():
+    """PR 6: routing with sort_fn="pallas" — stable sort by expert id plus
+    the activation-row gather — runs as a single fused pallas_call, and the
+    layer output matches the jnp stable-sort path exactly."""
+    from repro.kernels.merge_sort import trace_launches
+    from repro.models.moe import sort_route
+    cfg = get_smoke_config("llama4-scout-17b-a16e")
+    params = moe_init(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model),
+                          jnp.float32)
+    jax.clear_caches()
+    with trace_launches() as tr:
+        xd, se, st, sp, aux = sort_route(params, cfg, x, "pallas")
+    assert [r.kind for r in tr] == ["moe_dispatch"]
+    xd_j, se_j, st_j, sp_j, aux_j = sort_route(params, cfg, x)
+    np.testing.assert_array_equal(np.asarray(se), np.asarray(se_j))
+    np.testing.assert_array_equal(np.asarray(st), np.asarray(st_j))
+    np.testing.assert_array_equal(np.asarray(sp), np.asarray(sp_j))
+    np.testing.assert_array_equal(np.asarray(xd), np.asarray(xd_j))
+    out_p, _ = moe_sort_dispatch(params, cfg, x, sort_fn="pallas")
+    out_j, _ = moe_sort_dispatch(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_j),
+                               atol=1e-5, rtol=1e-5)

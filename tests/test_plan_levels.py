@@ -125,3 +125,29 @@ def test_sort_schedule_fused_vs_unfused_pass_count():
     unfused = plan.sort_schedule(sort_bits=12 + 20, digit_bits=4)
     assert fused.num_passes == 3
     assert unfused.num_passes == 8
+
+
+def test_sort_schedule_multi_tile_mode():
+    """PR 6: the merge-tree-free schedule — no levels, launch count
+    3 launches per digit pass regardless of n."""
+    from repro.core import MULTI_TILE_LAUNCHES_PER_PASS, SortSchedule
+    for n in (1024, 16384):
+        plan, _ = balanced_plan(n=n, tile=64)
+        sched = plan.sort_schedule(sort_bits=12, digit_bits=4,
+                                   key_shift=10, mode="multi_tile")
+        assert sched.mode == "multi_tile"
+        assert sched.levels == ()
+        assert sched.num_tiles == n // 64
+        assert sched.num_passes == 3
+        assert sched.num_launches == MULTI_TILE_LAUNCHES_PER_PASS * 3
+    # a single tile degenerates to the one-launch fused tile sort
+    one = SortSchedule(tile_passes=digit_passes(12, 4), levels=(),
+                       mode="multi_tile", num_tiles=1)
+    assert one.num_launches == 1
+    # schedule invariants are enforced at construction
+    with pytest.raises(ValueError, match="merge levels"):
+        SortSchedule(tile_passes=digit_passes(12, 4),
+                     levels=tuple(balanced_plan()[0].merge_schedule()),
+                     mode="multi_tile", num_tiles=16)
+    with pytest.raises(ValueError, match="mode"):
+        SortSchedule(tile_passes=(), levels=(), mode="bogus")

@@ -1,0 +1,155 @@
+"""Cross-tile carry scan (kernels/tile_scan.py) — the PR 6 machinery that
+turns the (num_tiles × R) digit-histogram matrix into global base offsets
+in ONE launch, and the end-to-end multi-tile stability it underwrites.
+
+With real ``hypothesis`` the properties run as ``@given`` tests; under the
+conftest stub they degrade to a seeded sweep instead of skipping (the
+tests/test_dist_properties.py pattern), so tier-1 keeps the coverage.
+"""
+
+import random
+
+import hypothesis
+import pytest
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.merge_sort import argsort, trace_launches
+from repro.kernels.tile_scan import histogram_offsets, tile_scan
+
+HAVE_HYPOTHESIS = hasattr(hypothesis, "__version__")
+
+
+# ---------------------------------------------------------------------------
+# check bodies (shared between the hypothesis and the seeded paths)
+# ---------------------------------------------------------------------------
+
+def check_scan(vals, block, inclusive):
+    vals = np.asarray(vals, np.int32)
+    out = np.asarray(tile_scan(jnp.asarray(vals), block=block,
+                               inclusive=inclusive))
+    ref = np.cumsum(vals, dtype=np.int32)
+    if not inclusive:
+        ref = ref - vals
+    np.testing.assert_array_equal(out, ref)
+
+
+def check_offsets(hist):
+    """offsets[t, d] = #(smaller digit anywhere) + #(same digit, earlier
+    tile) — the exclusive scan of the histogram flattened digit-major."""
+    hist = np.asarray(hist, np.int32)
+    nt, r = hist.shape
+    offs = np.asarray(histogram_offsets(jnp.asarray(hist), block=64))
+    ref = np.empty_like(hist)
+    for t in range(nt):
+        for d in range(r):
+            ref[t, d] = hist[:, :d].sum() + hist[:t, d].sum()
+    np.testing.assert_array_equal(offs, ref)
+
+
+def check_multi_tile_stable(keys, tile=256, num_key_bits=8):
+    """End-to-end: the multi-tile argsort must equal numpy's stable argsort
+    — equal keys straddling tile boundaries keep their original order only
+    if the carry scan assigns disjoint, correctly-ordered destination
+    windows to every (tile, digit) segment."""
+    keys = np.asarray(keys, np.int32)
+    got = np.asarray(argsort(jnp.asarray(keys), num_key_bits=num_key_bits,
+                             tile=tile, strategy="multi_tile"))
+    np.testing.assert_array_equal(got, np.argsort(keys, kind="stable"))
+
+
+# ---------------------------------------------------------------------------
+# deterministic adversarial cases (always run)
+# ---------------------------------------------------------------------------
+
+def test_scan_single_launch_any_n():
+    for n in (1, 5, 256, 1000, 4096):
+        with trace_launches() as tr:
+            tile_scan(jnp.ones((n,), jnp.int32), block=64)
+        assert [r.kind for r in tr] == ["tile_scan"]
+
+
+def test_scan_max_monoid():
+    rng = np.random.default_rng(0)
+    vals = rng.integers(-1000, 1000, 777).astype(np.int32)
+    out = np.asarray(tile_scan(jnp.asarray(vals), block=64,
+                               combine=jnp.maximum, unit=-(2 ** 31),
+                               inclusive=True))
+    np.testing.assert_array_equal(out, np.maximum.accumulate(vals))
+
+
+def test_all_equal_digit():
+    """One digit owns everything: offsets collapse to pure tile prefix
+    sums and the sort must still be the identity permutation."""
+    check_offsets(np.array([[0, 7, 0], [0, 5, 0], [0, 3, 0]]))
+    check_multi_tile_stable(np.full(1500, 9, np.int32))
+
+
+def test_one_hot_tile():
+    """All the mass of every digit sits in a single tile; every other
+    tile's histogram row is zero — the carry must pass through unchanged."""
+    nt, r = 6, 8
+    hist = np.zeros((nt, r), np.int32)
+    hist[3] = np.arange(1, r + 1)
+    check_offsets(hist)
+    keys = np.zeros(8 * 256, np.int32)
+    keys[3 * 256:4 * 256] = np.arange(256) % 7 + 1      # the one hot tile
+    check_multi_tile_stable(keys)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 17, 100, 255, 257, 1000, 1025,
+                               2047, 3000])
+def test_non_power_of_two_n_sweep(n):
+    rng = np.random.default_rng(n)
+    check_multi_tile_stable(rng.integers(0, 50, n).astype(np.int32))
+    check_scan(rng.integers(0, 100, n).astype(np.int32), 64, False)
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, strategies as st
+
+    @given(st.lists(st.integers(0, 1000), min_size=1, max_size=600),
+           st.sampled_from([16, 64, 256]), st.booleans())
+    def test_scan_matches_cumsum(vals, block, inclusive):
+        check_scan(vals, block, inclusive)
+
+    @given(st.integers(1, 8), st.integers(1, 16), st.data())
+    def test_offsets_match_bruteforce(nt, r, draw):
+        hist = draw.draw(st.lists(
+            st.lists(st.integers(0, 50), min_size=r, max_size=r),
+            min_size=nt, max_size=nt))
+        check_offsets(hist)
+
+    @given(st.lists(st.integers(0, 255), min_size=1, max_size=2000))
+    def test_multi_tile_stable_across_boundaries(keys):
+        check_multi_tile_stable(keys)
+else:
+    _RNG = random.Random(0)
+    _SCAN_CASES = [( [_RNG.randint(0, 1000) for _ in range(_RNG.randint(1, 600))],
+                     _RNG.choice([16, 64, 256]), _RNG.random() < 0.5)
+                   for _ in range(20)]
+    _HIST_CASES = []
+    for _ in range(20):
+        nt, r = _RNG.randint(1, 8), _RNG.randint(1, 16)
+        _HIST_CASES.append([[_RNG.randint(0, 50) for _ in range(r)]
+                            for _ in range(nt)])
+    _KEY_CASES = [[_RNG.randint(0, 255)
+                   for _ in range(_RNG.randint(1, 2000))]
+                  for _ in range(10)]
+
+    @pytest.mark.parametrize("vals,block,inclusive", _SCAN_CASES)
+    def test_scan_matches_cumsum(vals, block, inclusive):
+        check_scan(vals, block, inclusive)
+
+    @pytest.mark.parametrize("hist", _HIST_CASES)
+    def test_offsets_match_bruteforce(hist):
+        check_offsets(hist)
+
+    @pytest.mark.parametrize("keys", _KEY_CASES)
+    def test_multi_tile_stable_across_boundaries(keys):
+        check_multi_tile_stable(keys)

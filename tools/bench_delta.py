@@ -7,6 +7,14 @@ Rows are matched by ``name``.  Rows whose *baseline* meta carries
 ``"pinned": true`` are guarded: a wall-clock regression beyond
 ``--max-regress`` (default 25%) fails the run (exit 1).
 
+Rows whose baseline meta carries ``"pinned_ints": ["key", ...]`` are
+guarded *structurally*: each named meta key must match the baseline
+EXACTLY (integer equality, no tolerance, no hardware normalization) —
+the mechanism that pins launch counts and block counts, e.g. the
+multi-tile radix property "argsort launches are independent of n" and the
+one-launch MoE dispatch.  Such rows may have ``us_per_call == 0``; they
+are reported in their own launch-count table.
+
 CI runners and the machine that committed the baseline differ in absolute
 speed, so raw us_per_call ratios conflate hardware with regressions.  By
 default the per-row ratio is therefore normalized by the **median ratio
@@ -71,38 +79,68 @@ def main(argv=None) -> int:
     fresh = load_rows(json.loads(Path(args.fresh).read_text()))
     base = load_rows(load_baseline(args.baseline, args.fresh))
 
+    # --- pinned integer metrics (launch counts etc.): exact equality,
+    # independent of the wall-clock machinery below
+    int_lines = []
+    int_failures = []
+    int_rows = [(name, row) for name, row in base.items()
+                if row.get("meta", {}).get("pinned_ints")]
+    for name, b in sorted(int_rows):
+        keys = b["meta"]["pinned_ints"]
+        f = fresh.get(name)
+        if f is None:
+            int_failures.append((name, "row MISSING from fresh results"))
+            int_lines.append(f"| {name} | — | — | — | MISSING |")
+            continue
+        for key in keys:
+            bv = b["meta"].get(key)
+            fv = f.get("meta", {}).get(key)
+            status = "ok" if bv == fv and fv is not None else "CHANGED"
+            if status != "ok":
+                int_failures.append((name, f"{key}: {bv} -> {fv}"))
+            int_lines.append(f"| {name} | {key} | {bv} | {fv} | {status} |")
+    if int_lines:
+        int_lines = ["", "#### pinned integer metrics (exact)", "",
+                     "| row | metric | base | fresh | status |",
+                     "|---|---|---:|---:|:-:|"] + int_lines
+
     matched = [(name, base[name], fresh[name])
                for name in base if name in fresh
                and base[name]["us_per_call"] > 0]
-    if not matched:
+    if not matched and not int_rows:
         print("bench_delta: no matching rows — nothing to compare")
         return 0
 
-    ratios = {name: f["us_per_call"] / b["us_per_call"]
-              for name, b, f in matched}
-    cal = [ratios[name] for name, b, _ in matched
-           if b.get("meta", {}).get("calibration")]
-    scale = 1.0 if args.no_normalize else \
-        statistics.median(cal if cal else list(ratios.values()))
-
-    lines = [f"### bench delta: `{args.fresh}` vs `{args.baseline}` "
-             f"(scale {scale:.2f}× over "
-             f"{len(cal) if cal else len(ratios)} "
-             f"{'calibration' if cal else 'matched'} rows)",
-             "",
-             "| row | base us | fresh us | delta | pinned | status |",
-             "|---|---:|---:|---:|:-:|:-:|"]
     failures = []
-    for name, b, f in matched:
-        delta = ratios[name] / scale - 1
-        pinned = bool(b.get("meta", {}).get("pinned"))
-        status = "ok"
-        if pinned and delta > args.max_regress:
-            status = "REGRESSED"
-            failures.append((name, delta))
-        lines.append(f"| {name} | {b['us_per_call']:.0f} "
-                     f"| {f['us_per_call']:.0f} | {delta:+.1%} "
-                     f"| {'📌' if pinned else ''} | {status} |")
+    lines = []
+    if matched:
+        ratios = {name: f["us_per_call"] / b["us_per_call"]
+                  for name, b, f in matched}
+        cal = [ratios[name] for name, b, _ in matched
+               if b.get("meta", {}).get("calibration")]
+        scale = 1.0 if args.no_normalize else \
+            statistics.median(cal if cal else list(ratios.values()))
+
+        lines = [f"### bench delta: `{args.fresh}` vs `{args.baseline}` "
+                 f"(scale {scale:.2f}× over "
+                 f"{len(cal) if cal else len(ratios)} "
+                 f"{'calibration' if cal else 'matched'} rows)",
+                 "",
+                 "| row | base us | fresh us | delta | pinned | status |",
+                 "|---|---:|---:|---:|:-:|:-:|"]
+        for name, b, f in matched:
+            delta = ratios[name] / scale - 1
+            pinned = bool(b.get("meta", {}).get("pinned"))
+            status = "ok"
+            if pinned and delta > args.max_regress:
+                status = "REGRESSED"
+                failures.append((name, delta))
+            lines.append(f"| {name} | {b['us_per_call']:.0f} "
+                         f"| {f['us_per_call']:.0f} | {delta:+.1%} "
+                         f"| {'📌' if pinned else ''} | {status} |")
+    else:
+        lines = [f"### bench delta: `{args.fresh}` vs `{args.baseline}` "
+                 f"(no wall-clock rows matched)"]
     # a pinned baseline row that vanished from the fresh results is a gate
     # bypass (renamed bench, partial emission, deleted emit), not a pass
     missing_pinned = sorted(
@@ -115,6 +153,7 @@ def main(argv=None) -> int:
     new_rows = sorted(set(fresh) - set(base))
     if new_rows:
         lines += ["", f"new rows (no baseline): {', '.join(new_rows)}"]
+    lines += int_lines
 
     table = "\n".join(lines)
     print(table)
@@ -123,13 +162,20 @@ def main(argv=None) -> int:
         with open(summary, "a") as fh:
             fh.write(table + "\n")
 
-    if failures:
-        print(f"\nbench_delta: {len(failures)} pinned row(s) regressed "
-              f"> {args.max_regress:.0%}: "
-              + ", ".join(f"{n} ({d:+.1%})" for n, d in failures),
-              file=sys.stderr)
+    if failures or int_failures:
+        if failures:
+            print(f"\nbench_delta: {len(failures)} pinned row(s) regressed "
+                  f"> {args.max_regress:.0%}: "
+                  + ", ".join(f"{n} ({d:+.1%})" for n, d in failures),
+                  file=sys.stderr)
+        if int_failures:
+            print(f"\nbench_delta: {len(int_failures)} pinned integer "
+                  "metric(s) changed: "
+                  + "; ".join(f"{n} ({msg})" for n, msg in int_failures),
+                  file=sys.stderr)
         return 1
-    print(f"\nbench_delta: all pinned rows within {args.max_regress:.0%}")
+    print(f"\nbench_delta: all pinned rows within {args.max_regress:.0%}"
+          + (" and all pinned integer metrics exact" if int_rows else ""))
     return 0
 
 
