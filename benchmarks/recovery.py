@@ -1,0 +1,109 @@
+"""Recovery cost under injected faults — the BENCH_recovery.json trajectory.
+
+The paper's robustness claims are *cost* claims (by_blocks bounds wasted
+work; adaptive re-spreads load through steal-linked splitting), so this
+benchmark measures what a failure actually costs each policy on the unified
+virtual-time Runtime, deterministic per (plan, seed):
+
+* **worker death** (the kill-a-host scenario at simulator granularity):
+  one of p workers dies a quarter of the way into the region.  Static
+  partitioning fails over whole chunks — one survivor re-runs the orphaned
+  chunk serially, and everything the dead worker had executed since its
+  chunk began is lost.  Adaptive (with the mid-region preemption hook)
+  loses at most one truncated grant and re-spreads the orphan across all
+  survivors via steals.  `recovery_makespan_ratio` = static/adaptive
+  makespan under the SAME fault plan; the ≥1.3x bar is pinned as an
+  integer row (ratio_x100, exact under bit-identical virtual time) gated
+  by tools/bench_delta.py.
+* **slowdown** (the straggler scenario): one worker at 1/4 speed; the
+  preemption hook is what lets late steal requests be served at all —
+  without it adaptive degenerates to the pinned zero-recovery roofline
+  row.
+* **lost-work fraction**: items whose fold state died with a worker and
+  had to be re-executed, as a fraction of total — the Dask-overheads-paper
+  question ("what does recovery cost"), not just "does it recover".
+"""
+
+from __future__ import annotations
+
+from repro.core import (AdaptivePolicy, CostModel, FaultPlan, Slowdown,
+                        StaticPartitionPolicy, WorkerDeath, WorkRange,
+                        simulate)
+
+from .common import emit, time_fn
+
+P = 8
+ITEMS = 200_000
+COST = CostModel(per_item=1.0)
+# death a quarter of the way through a perfectly balanced region
+DEATH = FaultPlan(deaths=(WorkerDeath(0, ITEMS / P / 2.0),))
+SLOW = FaultPlan(slowdowns=(Slowdown(0, 0.0, 1e12, 0.25),))
+
+
+def _run(policy, faults):
+    return simulate(WorkRange(0, ITEMS), policy, P, COST, seed=0,
+                    faults=faults)
+
+
+def run() -> None:
+    # --- worker death: static whole-chunk failover vs adaptive re-spread --
+    static = _run(StaticPartitionPolicy(), DEATH)
+    adaptive = _run(AdaptivePolicy(preempt=True), DEATH)
+    ratio = static.makespan / adaptive.makespan
+    us = time_fn(lambda: _run(AdaptivePolicy(preempt=True), DEATH))
+    emit("recovery/death/adaptive_vs_static", us,
+         f"ratio={ratio:.2f}x static={static.makespan:.0f} "
+         f"adaptive={adaptive.makespan:.0f} (>=1.3x bar)",
+         pinned_ints=["ratio_x100", "meets_bar_130", "items_conserved"],
+         ratio_x100=int(ratio * 100),
+         meets_bar_130=int(ratio >= 1.3),
+         items_conserved=int(
+             static.items_processed == adaptive.items_processed == ITEMS),
+         static_makespan=static.makespan,
+         adaptive_makespan=adaptive.makespan,
+         deaths=adaptive.deaths, recoveries=adaptive.recoveries)
+
+    # --- lost work: what the death cost beyond the makespan ---------------
+    emit("recovery/death/lost_work", 0.0,
+         f"static_lost={static.lost_items} adaptive_lost={adaptive.lost_items} "
+         f"static_frac={static.lost_work_fraction:.4f} "
+         f"adaptive_frac={adaptive.lost_work_fraction:.4f}",
+         pinned_ints=["adaptive_loses_less"],
+         adaptive_loses_less=int(
+             adaptive.lost_items < static.lost_items),
+         static_lost_items=static.lost_items,
+         adaptive_lost_items=adaptive.lost_items,
+         static_lost_frac=static.lost_work_fraction,
+         adaptive_lost_frac=adaptive.lost_work_fraction)
+
+    # --- slowdown: the straggler gap, closed by the preemption hook -------
+    st_slow = _run(StaticPartitionPolicy(), SLOW)
+    ad_plain = _run(AdaptivePolicy(), SLOW)
+    ad_pre = _run(AdaptivePolicy(preempt=True), SLOW)
+    ratio_slow = st_slow.makespan / ad_pre.makespan
+    emit("recovery/slowdown/preempt_hook", 0.0,
+         f"ratio={ratio_slow:.2f}x static={st_slow.makespan:.0f} "
+         f"plain={ad_plain.makespan:.0f} preempt={ad_pre.makespan:.0f}",
+         pinned_ints=["hook_beats_plain", "meets_bar_130"],
+         hook_beats_plain=int(ad_pre.makespan < ad_plain.makespan),
+         meets_bar_130=int(ratio_slow >= 1.3),
+         static_makespan=st_slow.makespan,
+         plain_makespan=ad_plain.makespan,
+         preempt_makespan=ad_pre.makespan)
+
+    # --- determinism: the whole table is replayable from (plan, seed) -----
+    again = _run(AdaptivePolicy(preempt=True), DEATH)
+    emit("recovery/determinism", 0.0,
+         f"replay_identical={int(again.makespan == adaptive.makespan)}",
+         pinned_ints=["replay_identical"],
+         replay_identical=int(
+             (again.makespan, again.lost_items, again.recoveries)
+             == (adaptive.makespan, adaptive.lost_items,
+                 adaptive.recoveries)))
+
+
+if __name__ == "__main__":
+    from .common import header, write_json
+    header()
+    run()
+    write_json("recovery")

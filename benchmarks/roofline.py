@@ -125,10 +125,12 @@ def straggler_sim(name: str, *, p: int = 16, slow: float = 0.85) -> None:
     assumption: partition the dominant stream over ``p`` chips with one
     straggler at ``slow``× speed.  A static partition is gated by the
     straggler (frac ≈ slow) — multiply the roofline fraction by this factor
-    for a skewed mesh.  The adaptive row is pinned alongside: under the
-    current engine adaptive steals only at region start, so it does *not*
-    recover the straggler gap — exactly the ROADMAP's interruptible
-    StaticPartitionPolicy open item.
+    for a skewed mesh.  The plain-adaptive row is pinned alongside: with
+    grants growing unchecked, adaptive steals only at region start, so it
+    does *not* recover the straggler gap.  The ``adaptive_preempt`` row is
+    the fix (PR 7): the mid-region preemption hook clips grants while idle
+    demand exists, so late steal requests are served and the straggler's
+    remainder re-spreads — frac recovers toward 1.0.
     """
     from repro.core import (AdaptivePolicy, CostModel, StaticPartitionPolicy,
                             WorkRange, simulate)
@@ -137,19 +139,23 @@ def straggler_sim(name: str, *, p: int = 16, slow: float = 0.85) -> None:
     speeds = [1.0] * p
     speeds[0] = slow
     ideal = items / sum(speeds)
+    cost_adap = CostModel(per_item=1.0, split_overhead=4.0,
+                          steal_latency=0.0)
     stat = simulate(WorkRange(0, items), StaticPartitionPolicy(), p,
                     CostModel(per_item=1.0), seed=0, speeds=speeds)
     # steal_latency=0: this row isolates the *partitioning* question (can
     # work migrate off the straggler at all), not steal-protocol costs
-    adap = simulate(WorkRange(0, items), AdaptivePolicy(), p,
-                    CostModel(per_item=1.0, split_overhead=4.0,
-                              steal_latency=0.0),
+    adap = simulate(WorkRange(0, items), AdaptivePolicy(), p, cost_adap,
                     seed=0, speeds=speeds)
+    pre = simulate(WorkRange(0, items), AdaptivePolicy(preempt=True), p,
+                   cost_adap, seed=0, speeds=speeds)
     emit(f"roofline/straggler_sim/{name}", stat.makespan,
          f"static_frac={ideal/stat.makespan:.2f} "
-         f"adaptive_frac={ideal/adap.makespan:.2f} p={p} slow={slow}",
+         f"adaptive_frac={ideal/adap.makespan:.2f} "
+         f"adaptive_preempt_frac={ideal/pre.makespan:.2f} p={p} slow={slow}",
          p=p, slow=slow, static_frac=ideal / stat.makespan,
-         adaptive_frac=ideal / adap.makespan)
+         adaptive_frac=ideal / adap.makespan,
+         adaptive_preempt_frac=ideal / pre.makespan)
 
 
 def run() -> None:

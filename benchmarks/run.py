@@ -22,8 +22,8 @@ def main() -> None:
                     help="skip writing results/bench/BENCH_*.json")
     args = ap.parse_args()
 
-    from . import (all_scan, fannkuch, find_first, moe_dispatch, roofline,
-                   sort_adaptors, sort_compare, task_counts)
+    from . import (all_scan, fannkuch, find_first, moe_dispatch, recovery,
+                   roofline, sort_adaptors, sort_compare, task_counts)
     from .common import header, reset, write_json
 
     # module name -> (module, JSON stem); sort benches share one trajectory
@@ -36,6 +36,7 @@ def main() -> None:
         "task_counts": (task_counts, "task_counts"),     # §2.1 / §3.6 claims
         "moe_dispatch": (moe_dispatch, "moe_dispatch"),  # sort dispatch
         "roofline": (roofline, "roofline"),              # §Roofline summary
+        "recovery": (recovery, "recovery"),              # fault recovery cost
     }
     header()
     failed = []

@@ -1,0 +1,18 @@
+"""repro.chaos — deterministic fault injection for the production layers.
+
+The virtual-time half of a :class:`~repro.core.faults.FaultPlan` (worker
+deaths, slowdowns) is consumed directly by the core Runtime; this package
+consumes the wall-clock half: checkpoint I/O failures, on-disk corruption,
+SIGTERM preemption and host death, injected into the train/serve layers
+through their public hooks (``CheckpointManager.io_check``,
+``Trainer.run(on_step=...)``).  See DESIGN.md for the fault model and
+determinism guarantees.
+"""
+
+from .harness import (ChaosError, CheckpointIOFaults, HostDeathInjector,
+                      HostLost, SigtermInjector, corrupt_checkpoint)
+
+__all__ = [
+    "ChaosError", "CheckpointIOFaults", "HostDeathInjector", "HostLost",
+    "SigtermInjector", "corrupt_checkpoint",
+]

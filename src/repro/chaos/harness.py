@@ -1,0 +1,119 @@
+"""Injectors wiring a FaultPlan's wall-clock events into train/serve hooks.
+
+Each injector is a small callable matching one existing hook, so production
+code carries no chaos-awareness beyond the hooks themselves:
+
+* :class:`CheckpointIOFaults` → ``CheckpointManager.io_check`` — fails the
+  k-th write *attempt* with ``OSError`` (the manager's retry-with-backoff
+  then either absorbs it or surfaces it);
+* :func:`corrupt_checkpoint`   → flips bytes of a saved ``arr_*.npy`` leaf
+  or truncates ``manifest.json`` (restore must fail loudly via the per-leaf
+  sha256 / JSON parse);
+* :class:`SigtermInjector`     → ``Trainer.run(on_step=...)`` — delivers a
+  real SIGTERM to this process at step k; the trainer's handler flips the
+  preemption flag, honoured at the next step boundary;
+* :class:`HostDeathInjector`   → ``Trainer.run(on_step=...)`` — raises
+  :class:`HostLost` at step k, modelling a host vanishing with the step
+  in flight: no final checkpoint runs, recovery must come from the last
+  completed checkpoint + elastic re-mesh (see tests/test_chaos.py).
+
+Determinism: every injector is driven by the plan's step/write indices —
+no wall-clock, no RNG — so a chaos run is replayable from the plan alone.
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+from pathlib import Path
+from typing import Optional
+
+from ..core.faults import FaultPlan, HostDeath
+
+
+class ChaosError(RuntimeError):
+    """Base class for injected failures."""
+
+
+class HostLost(ChaosError):
+    """A host (block of devices) vanished mid-step."""
+
+    def __init__(self, host: int, step: int, devices_per_host: int):
+        super().__init__(f"host {host} lost at step {step}")
+        self.host = host
+        self.step = step
+        self.devices_per_host = devices_per_host
+
+
+class CheckpointIOFaults:
+    """``io_check`` hook: raise OSError on the plan's k-th write attempt.
+
+    Attempts are counted 1-based across this injector's lifetime, matching
+    :class:`~repro.core.faults.CheckpointWriteFault.on_write`.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.attempts = 0
+
+    def __call__(self) -> None:
+        self.attempts += 1
+        if self.plan.checkpoint_write_fails(self.attempts):
+            raise OSError(
+                f"injected checkpoint I/O fault on write attempt "
+                f"{self.attempts}")
+
+
+def corrupt_checkpoint(directory: str, step: int, *, target: str = "leaf",
+                       leaf_index: int = 0) -> Path:
+    """Corrupt a completed checkpoint in place; returns the damaged file.
+
+    ``target="leaf"`` XOR-flips a byte in the middle of the leaf's data
+    payload (header left intact so ``np.load`` succeeds and the sha256
+    check is what catches it); ``target="manifest"`` truncates
+    manifest.json to half (JSON parse fails)."""
+    d = Path(directory) / f"step_{step:08d}"
+    if target == "manifest":
+        f = d / "manifest.json"
+        txt = f.read_text()
+        f.write_text(txt[:len(txt) // 2])
+        return f
+    f = d / f"arr_{leaf_index:05d}.npy"
+    raw = bytearray(f.read_bytes())
+    pos = max(128, len(raw) // 2)       # past the .npy header
+    if pos >= len(raw):
+        pos = len(raw) - 1
+    raw[pos] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    return f
+
+
+class SigtermInjector:
+    """``on_step`` hook: deliver SIGTERM to this process at planned steps."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.delivered: list = []
+
+    def __call__(self, step: int, state=None) -> None:
+        if self.plan.preempt_at(step):
+            self.delivered.append(step)
+            os.kill(os.getpid(), signal.SIGTERM)
+
+
+class HostDeathInjector:
+    """``on_step`` hook: raise :class:`HostLost` at the planned step."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+
+    def __call__(self, step: int, state=None) -> None:
+        h: Optional[HostDeath] = self.plan.host_death_at(step)
+        if h is not None:
+            raise HostLost(h.host, step, h.devices_per_host)
+
+
+__all__ = [
+    "ChaosError", "CheckpointIOFaults", "HostDeathInjector", "HostLost",
+    "SigtermInjector", "corrupt_checkpoint",
+]

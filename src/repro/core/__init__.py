@@ -9,6 +9,10 @@ Public surface:
 * Schedulers:  ``JoinScheduler``/``schedule_join``, ``ByBlocks``/``by_blocks``,
                ``AdaptiveScheduler``/``adaptive``
 * Plans:       ``build_plan``, ``demand_split``, ``geometric_blocks``
+* Faults:      ``FaultPlan`` + event types (``WorkerDeath``, ``Slowdown``,
+               ``CheckpointWriteFault``, ``CorruptionFault``,
+               ``PreemptionFault``, ``HostDeath``) — deterministic fault
+               injection into the Runtime and the chaos harness
 * D&C:         ``wrap_iter``, ``work_loop``
 * Runtime:     ``Runtime`` (the one discrete-event engine) + ``CostModel``/
                ``SimResult``; policies ``JoinPolicy``, ``DepJoinPolicy``,
@@ -30,6 +34,8 @@ from .plan import (Plan, PlanNode, MergeLevel, DigitPass, SortSchedule,
 from .schedulers import (JoinScheduler, schedule_join, ByBlocks, by_blocks,
                          BlockStats, AdaptiveScheduler, adaptive)
 from .dnc import wrap_iter, WrappedIter, work_loop
+from .faults import (FaultPlan, WorkerDeath, Slowdown, CheckpointWriteFault,
+                     CorruptionFault, PreemptionFault, HostDeath)
 from .runtime import CostModel, SimResult, Task, Runtime
 from .policies import (SchedulingPolicy, JoinPolicy, DepJoinPolicy,
                        AdaptivePolicy, StaticPartitionPolicy, ByBlocksPolicy,
@@ -49,6 +55,8 @@ __all__ = [
     "JoinScheduler", "schedule_join", "ByBlocks", "by_blocks", "BlockStats",
     "AdaptiveScheduler", "adaptive",
     "wrap_iter", "WrappedIter", "work_loop",
+    "FaultPlan", "WorkerDeath", "Slowdown", "CheckpointWriteFault",
+    "CorruptionFault", "PreemptionFault", "HostDeath",
     "CostModel", "SimResult", "Task", "Runtime",
     "SchedulingPolicy", "JoinPolicy", "DepJoinPolicy", "AdaptivePolicy",
     "StaticPartitionPolicy", "ByBlocksPolicy", "simulate",

@@ -92,6 +92,14 @@ class SchedulingPolicy:
         """True → the finishing worker reduces immediately (depjoin)."""
         return False
 
+    def preempt_grant(self, rt: Runtime, wid: int, task: Task,
+                      grant: int) -> int:
+        """Mid-region preemption hook: a policy may shrink the next grant so
+        a micro-loop boundary (the only steal-service point) arrives sooner.
+        The default keeps the grant unchanged — faultless runs are
+        bit-identical."""
+        return grant
+
 
 # ---------------------------------------------------------------------------
 # join / depjoin
@@ -103,11 +111,15 @@ class JoinPolicy(SchedulingPolicy):
     name = "join"
 
     def on_region_start(self, rt: Runtime, work: Divisible) -> None:
-        rt.current[0] = Task(work=work, creator=0)
+        w0 = rt.seed_worker()            # 0 unless the fault plan killed it
+        rt.current[w0] = Task(work=work, creator=w0)
         rt.outstanding = 1
 
     def select_worker(self, rt: Runtime) -> Optional[int]:
-        return min(range(rt.p), key=lambda i: rt.time[i])
+        cand = [i for i in range(rt.p) if rt.alive(i)]
+        if not cand:
+            return None
+        return min(cand, key=lambda i: rt.time[i])
 
     def quantum(self, rt: Runtime, wid: int) -> None:
         task = rt.current[wid]
@@ -165,18 +177,31 @@ class AdaptivePolicy(SchedulingPolicy):
     pending request splits the *remaining* work in half and hands it to the
     thief directly; nano size resets.  Reductions form a chain of
     (tasks − 1) merges charged at region end.
+
+    ``preempt=True`` arms the mid-region preemption hook: while another
+    alive worker is idle (a pending steal request, or a fault-plan death
+    freed its work), the next grant is clipped to ``nano0`` so the
+    steal-service boundary arrives after ~nano0 items instead of after the
+    geometrically grown nano-loop.  This is what lets adaptive re-spread an
+    orphaned task across survivors *inside* a region — without it, late in
+    a region there are no micro-loop boundaries left and recovery never
+    happens (the pinned zero-recovery roofline result).  Faultless,
+    demand-free runs are unchanged: the clip only fires when demand exists.
     """
 
     name = "adaptive"
 
-    def __init__(self, nano0: int = 1, nano_cap: int = 1 << 20):
+    def __init__(self, nano0: int = 1, nano_cap: int = 1 << 20,
+                 preempt: bool = False):
         self.nano0 = nano0
         self.nano_cap = nano_cap
+        self.preempt = preempt
 
     def on_region_start(self, rt: Runtime, work: Divisible) -> None:
         self._region_tasks = 1
         rt.stats["tasks"] += 1
-        rt.current[0] = Task(work=work, creator=0, nano=self.nano0)
+        w0 = rt.seed_worker()            # 0 unless the fault plan killed it
+        rt.current[w0] = Task(work=work, creator=w0, nano=self.nano0)
 
     def select_worker(self, rt: Runtime) -> Optional[int]:
         active = [i for i in range(rt.p) if rt.current[i] is not None]
@@ -192,7 +217,10 @@ class AdaptivePolicy(SchedulingPolicy):
             rt.retire(wid)
             return
         grant = min(task.nano, remaining)
+        grant = self.preempt_grant(rt, wid, task, grant)
         hit = rt.run_grant(wid, w, grant)
+        if rt.worker_died(wid):               # grant truncated by a death
+            return
         if hit is not None:                   # nano-loop interruption (§4.1)
             rt.raise_stop(hit)
             rt.retire(wid)
@@ -210,6 +238,12 @@ class AdaptivePolicy(SchedulingPolicy):
             self._region_tasks += 1
         else:                                 # un-stolen micro-loop: grow
             task.nano = min(task.nano * 2, self.nano_cap)
+
+    def preempt_grant(self, rt: Runtime, wid: int, task: Task,
+                      grant: int) -> int:
+        if self.preempt and grant > self.nano0 and rt.has_demand(wid):
+            return self.nano0
+        return grant
 
     def _may_split(self, rt: Runtime, w: Divisible, wid: int,
                    thief: int) -> bool:
@@ -253,8 +287,12 @@ class StaticPartitionPolicy(SchedulingPolicy):
             chunks.append(l)
         chunks.append(rest)
         rt.stats["divisions"] += nb - 1
+        # round-robin over *alive* workers: with no fault plan this is the
+        # identity assignment i % p (bit-identical to the pre-fault engine)
+        targets = [i for i in range(rt.p) if rt.alive(i)]
         for i, ch in enumerate(chunks):
-            rt.push_task(i % rt.p, Task(work=ch, creator=i % rt.p))
+            t = targets[i % len(targets)]
+            rt.push_task(t, Task(work=ch, creator=t))
 
     def select_worker(self, rt: Runtime) -> Optional[int]:
         cand = [i for i in range(rt.p)
@@ -328,10 +366,10 @@ class ByBlocksPolicy(SchedulingPolicy):
 
 def simulate(work: Divisible, policy: SchedulingPolicy, p: int,
              cost: Optional[CostModel] = None, *, seed: int = 0,
-             speeds=None, stop_predicate=None) -> SimResult:
+             speeds=None, stop_predicate=None, faults=None) -> SimResult:
     """One-call face: run ``work`` under ``policy`` on ``p`` virtual workers."""
     return Runtime(p, cost or CostModel(), policy, seed=seed, speeds=speeds,
-                   stop_predicate=stop_predicate).run(work)
+                   stop_predicate=stop_predicate, faults=faults).run(work)
 
 
 __all__ = [

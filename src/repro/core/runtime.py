@@ -46,6 +46,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .adaptors import Adaptor, StealContext
 from .divisible import Divisible
+from .faults import FaultPlan
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +98,13 @@ class SimResult:
     per_worker_busy: List[float]
     stopped_early: bool = False
     wasted_items: int = 0        # items beyond the stop index (0 if not stopped)
+    deaths: int = 0              # workers killed by the fault plan
+    lost_items: int = 0          # items whose fold state died with a worker
+    recoveries: int = 0          # orphaned tasks adopted by survivors
+
+    @property
+    def lost_work_fraction(self) -> float:
+        return self.lost_items / self.items_total if self.items_total else 0.0
 
     @property
     def speedup_vs_serial(self) -> float:
@@ -136,6 +144,7 @@ class Task:
     creator: int = 0
     stolen: bool = False
     nano: int = 1
+    orphan_t: float = 0.0        # region time its previous owner died
 
 
 def _unwrap(w: Divisible) -> Divisible:
@@ -158,7 +167,8 @@ class Runtime:
 
     def __init__(self, p: int, cost: CostModel, policy: "Any", *,
                  seed: int = 0, speeds: Optional[List[float]] = None,
-                 stop_predicate: Optional[Callable[[Any], Optional[int]]] = None):
+                 stop_predicate: Optional[Callable[[Any], Optional[int]]] = None,
+                 faults: Optional[FaultPlan] = None):
         self.p = p
         self.cost = cost
         self.policy = policy
@@ -166,6 +176,10 @@ class Runtime:
         self.speeds = speeds or [1.0] * p
         assert len(self.speeds) == p
         self.stop_predicate = stop_predicate
+        # only runtime-facing events matter here; a plan with none is inert
+        self.faults = faults if (faults is not None
+                                 and faults.has_runtime_events()) else None
+        self._base_speeds = list(self.speeds)
 
     # -- top level -----------------------------------------------------------
 
@@ -174,10 +188,17 @@ class Runtime:
         self.busy = [0.0] * self.p
         self.stats: Dict[str, int] = dict(
             tasks=0, divisions=0, steal_try=0, steal_ok=0, reductions=0,
-            items=0)
+            items=0, deaths=0, lost=0, recoveries=0)
         self.stop_flag = False
         self.stop_hit: Any = None
         self.items_total = work.size()
+        # fault state spans regions: dead stays dead across by_blocks blocks,
+        # and event times are absolute (abs_offset accumulates region spans)
+        self.dead = [False] * self.p
+        self.orphans: deque = deque()
+        self.abs_offset = 0.0
+        if self.faults is not None:      # slowdowns mutate speeds in place
+            self.speeds = list(self._base_speeds)
         # processed index ranges, for exact wasted-work accounting on
         # integer-indexed work (WorkRange family)
         self._segments: List[Tuple[int, int]] = []
@@ -200,11 +221,18 @@ class Runtime:
         self.region_done = False
         policy.on_region_start(self, work)
         while not self.region_done:
+            if self.faults is not None:
+                self.fault_service()
             wid = policy.select_worker(self)
             if wid is None:
+                if self.faults is not None and self.orphans:
+                    continue      # next fault_service adopts the orphans
                 break
             policy.quantum(self, wid)
-        return policy.on_region_end(self)
+        span = policy.on_region_end(self)
+        if self.faults is not None:
+            self.abs_offset += span
+        return span
 
     def _build_result(self, makespan: float) -> SimResult:
         # wasted work = processed items strictly beyond the stop index (the
@@ -224,7 +252,9 @@ class Runtime:
             items_processed=self.stats["items"],
             items_total=self.items_total,
             per_worker_busy=self.busy, stopped_early=self.stop_flag,
-            wasted_items=wasted)
+            wasted_items=wasted, deaths=self.stats["deaths"],
+            lost_items=self.stats["lost"],
+            recoveries=self.stats["recoveries"])
 
     # -- time & cost charging ------------------------------------------------
 
@@ -234,7 +264,115 @@ class Runtime:
         self.busy[wid] += t
 
     def idle_count(self) -> int:
+        if self.faults is not None:
+            return sum(1 for i, c in enumerate(self.current)
+                       if c is None and not self.dead[i])
         return sum(1 for c in self.current if c is None)
+
+    # -- fault injection (all paths gated on a live FaultPlan) ---------------
+
+    def alive(self, wid: int) -> bool:
+        return self.faults is None or not self.dead[wid]
+
+    def worker_died(self, wid: int) -> bool:
+        """Policy-facing: did the current quantum end in this worker's
+        death (mid-grant truncation)?"""
+        return self.faults is not None and self.dead[wid]
+
+    def has_demand(self, wid: int) -> bool:
+        """Is any *other* alive worker idle right now?  The mid-region
+        preemption hook consults this to keep steal-service boundaries
+        frequent while demand exists."""
+        return any(self.current[i] is None and self.alive(i)
+                   for i in range(self.p) if i != wid)
+
+    def seed_worker(self) -> int:
+        """Worker that seeds a region's initial task (0 unless dead)."""
+        if self.faults is None:
+            return 0
+        for i in range(self.p):
+            if not self.dead[i]:
+                return i
+        raise RuntimeError("fault plan killed every worker")
+
+    def _abs_time(self, wid: int) -> float:
+        return self.abs_offset + self.time[wid]
+
+    def fault_service(self) -> None:
+        """One discrete-event service pass: fire due deaths and slowdowns,
+        then let idle survivors adopt orphaned tasks (the recovery steal)."""
+        f = self.faults
+        for i in range(self.p):
+            if self.dead[i]:
+                continue
+            self.speeds[i] = self._base_speeds[i] * f.speed_factor(
+                i, self._abs_time(i))
+            td = f.death_time(i)
+            if td is not None and self._abs_time(i) >= td:
+                self.kill_worker(i)
+        if not self.orphans:
+            return
+        survivors = [i for i in range(self.p) if not self.dead[i]]
+        if not survivors:
+            raise RuntimeError(
+                "fault plan killed every worker with work outstanding")
+        for i in survivors:
+            if not self.orphans:
+                break
+            if self.current[i] is not None:
+                continue
+            task = self.orphans.popleft()
+            task.stolen = True
+            task.nano = 1            # fresh micro-loop: re-splittable at once
+            lat = self.cost.steal_latency / self.speeds[i]
+            self.time[i] = max(self.time[i], task.orphan_t) + lat
+            if isinstance(task.work, Adaptor):
+                task.work.on_steal()
+            self.current[i] = task
+            self.waiting.pop(i, None)
+            self.stats["recoveries"] += 1
+
+    def kill_worker(self, wid: int) -> None:
+        """Process a worker death: its in-flight task and queued tasks
+        re-enter the steal pool; deferred reductions move to a survivor."""
+        self.dead[wid] = True
+        self.stats["deaths"] += 1
+        t = self.time[wid]
+        task = self.current[wid]
+        self.current[wid] = None
+        if task is not None:
+            task.orphan_t = t
+            self.orphans.append(task)
+        while self.deques[wid]:
+            q = self.deques[wid].popleft()
+            q.orphan_t = t
+            self.orphans.append(q)
+        if self.pending_reductions[wid]:
+            succ = self._successor(wid)
+            if succ is not None:
+                self.pending_reductions[succ].extend(
+                    self.pending_reductions[wid])
+            self.pending_reductions[wid] = []
+        self.waiting.pop(wid, None)
+
+    def _successor(self, wid: int) -> Optional[int]:
+        for i in range(self.p):
+            if i != wid and not self.dead[i]:
+                return i
+        return None
+
+    def _death_cut(self, wid: int, dur: float) -> Optional[float]:
+        """If a charge of worker-time ``dur`` starting now spans this
+        worker's death, return the surviving fraction in [0, 1)."""
+        if self.faults is None or self.dead[wid]:
+            return None
+        td = self.faults.death_time(wid)
+        if td is None:
+            return None
+        t0 = self._abs_time(wid)
+        if dur <= 0 or td >= t0 + dur:
+            return None
+        return max(0.0, (td - t0) / dur)
 
     # -- division ------------------------------------------------------------
 
@@ -265,10 +403,25 @@ class Runtime:
         check the interruption flag *before* starting — classical schedulers
         can only cancel non-started tasks (paper §4.1)."""
         w = task.work
-        self.stats["tasks"] += 1
         n_items = w.size()
         if self.stop_flag:
             n_items = 0  # cancelled before start
+        if self.faults is not None:
+            dur = n_items * self.cost.per_item / self.speeds[wid]
+            frac = self._death_cut(wid, dur)
+            if frac is not None:
+                # the leaf is truncated at the death point: items executed
+                # before the cut are lost (their fold state died with the
+                # worker) and the WHOLE leaf re-enters the steal pool — the
+                # producer was never advanced, so re-execution is exact
+                done = int(n_items * frac)
+                self.time[wid] += frac * dur
+                self.busy[wid] += frac * dur
+                self.stats["lost"] += done
+                self.current[wid] = task  # the object kill_worker orphans
+                self.kill_worker(wid)
+                return
+        self.stats["tasks"] += 1
         self.charge(wid, n_items * self.cost.per_item)
         self.stats["items"] += n_items
         self._record_segment(w, n_items)
@@ -289,6 +442,19 @@ class Runtime:
         predicate's hit value (or None)."""
         run_t = ((grant * self.cost.per_item + self.cost.check_overhead)
                  / self.speeds[wid])
+        if self.faults is not None:
+            frac = self._death_cut(wid, run_t)
+            if frac is not None:
+                # grant truncated at the death point: the partial fold is
+                # lost, the producer does NOT advance, and the worker's
+                # current task (holding the full remaining extent) is
+                # orphaned into the steal pool by kill_worker
+                done = min(grant, int(grant * frac))
+                self.time[wid] += frac * run_t
+                self.busy[wid] += frac * run_t
+                self.stats["lost"] += done
+                self.kill_worker(wid)
+                return None
         hit = [None]
         pred = self.stop_predicate
 
@@ -343,7 +509,12 @@ class Runtime:
                 node = node.parent
             else:
                 node.reduce_ready = True
-                self.pending_reductions[node.owner].append(node)
+                owner = node.owner
+                if self.faults is not None and self.dead[owner]:
+                    owner = self._successor(owner)
+                    if owner is None:
+                        owner = wid   # last survivor reduces its own tree
+                self.pending_reductions[owner].append(node)
                 return
 
     def run_deferred_reduction(self, wid: int) -> None:
@@ -379,7 +550,7 @@ class Runtime:
         any idle worker has, by construction, nothing else to do).  Each idle
         spell counts as one steal attempt."""
         for thief in range(self.p):
-            if self.current[thief] is None:
+            if self.current[thief] is None and self.alive(thief):
                 if thief not in self.waiting:
                     self.waiting[thief] = self.time[thief]
                     self.stats["steal_try"] += 1
@@ -414,6 +585,8 @@ class Runtime:
     def idle_or_finish(self, wid: int) -> None:
         """Nothing to run, pop, or steal: either the region is over, or this
         worker's clock jumps to the next busy worker's time."""
+        if self.faults is not None and self.orphans:
+            return   # the next fault_service pass adopts into this worker
         p = self.p
         if self.outstanding <= 0 and not any(
                 self.pending_reductions[i] for i in range(p)):

@@ -81,6 +81,24 @@ class EngineConfig:
     pad_id: int = 0
     max_seq: int = 512
     admission: str = "cap"        # "cap" (FIFO up to max_batch) | "simulate"
+    # preemption budget: max prefill blocks one step() may spend on a batch;
+    # a straggling (long-prompt) prefill is preempted at the next by_blocks
+    # boundary and its residual requeued — None disables preemption
+    prefill_block_budget: Optional[int] = None
+
+
+@dataclasses.dataclass
+class _PrefillResidual:
+    """A preempted prefill: everything needed to resume at ``pos``.  The
+    cache already holds positions < pos, so the residual is exactly the
+    unprocessed suffix — the overshoot beyond the preemption point is the
+    one block that was in flight, bounded by growth/(1+growth)."""
+
+    batch: List[Request]
+    toks: jnp.ndarray
+    cache: Any
+    pos: int
+    max_new: int
 
 
 class Engine:
@@ -93,6 +111,7 @@ class Engine:
         self.queue: List[Request] = []
         self.admission = cap(WorkRange(0, 1 << 30), cfg.max_batch)
         self.admission_sim = AdmissionSimulator(lanes=cfg.max_batch)
+        self._residual: Optional[_PrefillResidual] = None
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -109,7 +128,17 @@ class Engine:
         return batch
 
     def step(self) -> List[Request]:
-        """Serve one admitted batch to completion; returns finished reqs."""
+        """Serve one unit of work; returns finished reqs (possibly []).
+
+        A preempted prefill residual has priority over new admissions: the
+        batch that was preempted resumes at its stashed position before any
+        new batch starts — each step() spends at most
+        ``prefill_block_budget`` prefill blocks, so no single long prompt
+        can monopolize the engine."""
+        if self._residual is not None:
+            r, self._residual = self._residual, None
+            return self._prefill_and_decode(r.batch, r.toks, r.cache,
+                                            r.max_new, start=r.pos)
         batch = self._next_batch()
         if not batch:
             return []
@@ -121,8 +150,21 @@ class Engine:
             toks[i, :len(r.prompt)] = r.prompt     # left-aligned prompts
         max_new = max(r.max_new for r in batch)
         cache = self.model.init_cache(B, S + max_new)
+        return self._prefill_and_decode(batch, jnp.asarray(toks), cache,
+                                        max_new, start=0)
+
+    def _prefill_and_decode(self, batch: List[Request], toks: jnp.ndarray,
+                            cache: Any, max_new: int, *, start: int
+                            ) -> List[Request]:
+        B, S = toks.shape
         logits, cache, pstats = self.prefiller.run(
-            self.params, jnp.asarray(toks), cache)
+            self.params, toks, cache, start=start,
+            max_blocks=self.cfg.prefill_block_budget)
+        if pstats.preempted:      # requeue the bounded residual, yield
+            self._residual = _PrefillResidual(
+                batch=batch, toks=toks, cache=cache,
+                pos=pstats.next_start, max_new=max_new)
+            return []
         lengths = jnp.asarray([S] * B, jnp.int32)
         first = jnp.argmax(
             logits[:, :self.model.cfg.vocab_size], -1).astype(jnp.int32)

@@ -28,6 +28,9 @@ class PrefillStats:
     blocks: int = 0
     tokens: int = 0
     cancelled: bool = False
+    preempted: bool = False       # budget exhausted at a block boundary
+    next_start: int = 0           # resume offset (valid when preempted)
+    last_block: int = 0           # size of the last block that ran
 
 
 class ChunkedPrefill:
@@ -49,24 +52,40 @@ class ChunkedPrefill:
 
     def run(self, params: Any, tokens: jnp.ndarray, cache: Any, *,
             batch: Optional[Dict[str, jnp.ndarray]] = None,
-            should_cancel: Callable[[], bool] = lambda: False
+            should_cancel: Callable[[], bool] = lambda: False,
+            start: int = 0, max_blocks: Optional[int] = None
             ) -> Tuple[Optional[jnp.ndarray], Any, PrefillStats]:
         """tokens: (B, S).  Returns (last logits | None-if-cancelled, cache,
-        stats).  ``batch`` carries modality stubs for cross-attn models."""
+        stats).  ``batch`` carries modality stubs for cross-attn models.
+
+        ``start`` resumes a previously preempted prefill at that position
+        (the cache must already hold positions < start — i.e. the cache this
+        method returned when it set ``stats.preempted``).  ``max_blocks``
+        bounds how many blocks run in this call: when the budget is spent at
+        a block boundary the remaining work is the caller's to requeue
+        (``stats.next_start``) — the by_blocks preemption point, with the
+        block just run (``stats.last_block``) the only non-useful overshoot,
+        bounded by growth/(1+growth) of the processed prefix."""
         B, S = tokens.shape
-        if batch is not None:
+        if batch is not None and start == 0:
             cache = self.model.encode_to_cache(params, batch, cache)
         stats = PrefillStats()
         logits = None
-        for blk in self.policy.blocks(SeqWork(0, S)):
+        for blk in self.policy.blocks(SeqWork(start, S)):
             c = blk.size()
             fn = self._chunk_fn(c, blk.start)
             logits, cache = fn(params, tokens[:, blk.start:blk.stop], cache)
             stats.blocks += 1
             stats.tokens += c
+            stats.last_block = c
             if should_cancel():
                 stats.cancelled = True
                 return None, cache, stats
+            if (max_blocks is not None and stats.blocks >= max_blocks
+                    and blk.stop < S):
+                stats.preempted = True
+                stats.next_start = blk.stop
+                return logits, cache, stats
         return logits, cache, stats
 
 

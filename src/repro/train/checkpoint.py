@@ -16,8 +16,12 @@ Guarantees:
 * **resharding restore** — leaves are restored with ``jax.device_put`` onto
   whatever shardings the *current* mesh prescribes, so restore works across
   mesh changes (elastic re-meshing, pod count changes),
-* **integrity** — manifest carries per-leaf byte sizes + a config fingerprint;
-  mismatches fail loudly.
+* **integrity** — manifest carries per-leaf byte sizes, a per-leaf sha256 of
+  the saved bytes and a config fingerprint; corrupted ``arr_*.npy`` bytes or
+  a mismatched config fail loudly at restore,
+* **retry** — transient I/O failures (``OSError``) during a save are retried
+  ``retries`` times with exponential backoff; the ``io_check`` hook lets a
+  fault plan inject failures deterministically (see :mod:`repro.chaos`).
 """
 
 from __future__ import annotations
@@ -30,7 +34,7 @@ import shutil
 import threading
 import time
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import ml_dtypes
@@ -73,6 +77,11 @@ class CheckpointManager:
     directory: str
     keep: int = 3
     fingerprint: str = ""
+    retries: int = 0                # extra attempts after a failed write
+    backoff_s: float = 0.0          # base sleep between attempts (doubles)
+    # fault-injection / health hook: called once per write attempt; raising
+    # OSError fails that attempt (and consumes a retry)
+    io_check: Optional[Callable[[], None]] = None
 
     def __post_init__(self):
         self.dir = Path(self.directory)
@@ -93,22 +102,37 @@ class CheckpointManager:
             "time": time.time(),
             "extra": extra or {},
             "leaves": [{"path": p, "shape": list(a.shape),
-                        "dtype": str(a.dtype), "bytes": int(a.nbytes)}
+                        "dtype": str(a.dtype), "bytes": int(a.nbytes),
+                        "sha256": hashlib.sha256(
+                            _to_savable(a).tobytes()).hexdigest()}
                        for p, a in zip(_tree_paths(state), host_leaves)],
         }
 
+        def write_once():
+            if self.io_check is not None:
+                self.io_check()
+            tmp = self.dir / f"step_{step:08d}.tmp-{os.getpid()}"
+            tmp.mkdir(parents=True, exist_ok=True)
+            for i, a in enumerate(host_leaves):
+                np.save(tmp / f"arr_{i:05d}.npy", _to_savable(a))
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            final = self.dir / f"step_{step:08d}"
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+            self._gc()
+
         def write():
             try:
-                tmp = self.dir / f"step_{step:08d}.tmp-{os.getpid()}"
-                tmp.mkdir(parents=True, exist_ok=True)
-                for i, a in enumerate(host_leaves):
-                    np.save(tmp / f"arr_{i:05d}.npy", _to_savable(a))
-                (tmp / "manifest.json").write_text(json.dumps(manifest))
-                final = self.dir / f"step_{step:08d}"
-                if final.exists():
-                    shutil.rmtree(final)
-                tmp.rename(final)
-                self._gc()
+                for attempt in range(self.retries + 1):
+                    try:
+                        write_once()
+                        return
+                    except OSError:
+                        if attempt >= self.retries:
+                            raise
+                        if self.backoff_s:
+                            time.sleep(self.backoff_s * (2 ** attempt))
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
 
@@ -168,7 +192,16 @@ class CheckpointManager:
         out = []
         for i, (ab, sh, meta) in enumerate(
                 zip(leaves, shard_leaves, manifest["leaves"])):
-            a = _from_saved(np.load(d / f"arr_{i:05d}.npy"), meta["dtype"])
+            raw = np.load(d / f"arr_{i:05d}.npy")
+            want = meta.get("sha256")   # absent in pre-sha256 checkpoints
+            if want:
+                got = hashlib.sha256(raw.tobytes()).hexdigest()
+                if got != want:
+                    raise ValueError(
+                        f"checkpoint corruption: leaf {i} ({meta['path']}) "
+                        f"sha256 {got[:12]}... != manifest {want[:12]}... "
+                        f"in {d}")
+            a = _from_saved(raw, meta["dtype"])
             if tuple(a.shape) != tuple(ab.shape):
                 raise ValueError(f"shape mismatch at leaf {i} "
                                  f"({meta['path']}): {a.shape} vs {ab.shape}")

@@ -37,6 +37,8 @@ class LoopConfig:
     log_every: int = 10
     num_microbatches: int = 1
     num_replicas: int = 1          # telemetry granularity (DP replicas)
+    ckpt_retries: int = 2          # transient-I/O retries per checkpoint
+    ckpt_backoff_s: float = 0.0    # base retry backoff (doubles per attempt)
 
 
 class Trainer:
@@ -58,7 +60,9 @@ class Trainer:
             "model": dataclasses.asdict(model.cfg),
             "opt": dataclasses.asdict(opt_cfg)})
         self.ckpt = CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep,
-                                      fingerprint=fp)
+                                      fingerprint=fp,
+                                      retries=loop_cfg.ckpt_retries,
+                                      backoff_s=loop_cfg.ckpt_backoff_s)
         self.telemetry = TelemetryBuffer(loop_cfg.num_replicas)
         self.rebalancer = AdaptiveRebalancer(loop_cfg.num_replicas)
         self.detector = StragglerDetector()
@@ -93,7 +97,13 @@ class Trainer:
                        blocking=blocking)
 
     # ----------------------------------------------------------------- run
-    def run(self, state: Optional[TrainState] = None) -> TrainState:
+    def run(self, state: Optional[TrainState] = None, *,
+            on_step: Optional[Callable[[int, TrainState], None]] = None
+            ) -> TrainState:
+        """Run the loop.  ``on_step(step, state)`` fires after every completed
+        step, before checkpointing — the chaos harness injects faults (SIGTERM,
+        host death) there; anything it raises or signals is then handled at
+        the step boundary, the by_blocks interruption point."""
         lc = self.loop_cfg
         if state is None:
             state = self.init_or_restore()
@@ -106,6 +116,8 @@ class Trainer:
             jax.block_until_ready(metrics["loss"])
             dt = time.time() - t0
             step += 1
+            if on_step is not None:
+                on_step(step, state)
             self.telemetry.record(step % lc.num_replicas, dt)
             shares = self.rebalancer.maybe_rebalance(self.telemetry)
             evict = self.detector.check(self.telemetry)

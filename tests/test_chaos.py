@@ -1,0 +1,417 @@
+"""End-to-end chaos: the wall-clock fault layer (repro.chaos) against the
+production train/serve wiring.
+
+Covers the full fault taxonomy above the virtual-time Runtime (which
+tests/test_faults.py owns):
+
+* checkpoint I/O faults absorbed by retry-with-backoff / surfaced on
+  exhaustion, with atomicity intact either way,
+* corruption: per-leaf sha256 catches flipped bytes, manifest truncation
+  fails at parse, pre-sha256 checkpoints stay restorable,
+* ``gc_incomplete``: orphaned .tmp dirs are swept on restart and never
+  shadow complete checkpoints,
+* SIGTERM: real signal → flag at the step boundary → final checkpoint →
+  resume with zero lost/repeated samples,
+* serve: a straggling prefill is preempted at a by_blocks boundary, the
+  bounded residual requeued, and the preempted engine's outputs match the
+  unpreempted engine exactly,
+* mesh8 tier: kill a host mid-step and survive it — eviction justified by
+  telemetry + the simulated policy, ``choose_mesh`` over the survivors,
+  restore resharded through host memory, resume matching the uninterrupted
+  trajectory.
+"""
+
+import dataclasses
+import json
+import signal
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.chaos import (CheckpointIOFaults, HostDeathInjector, HostLost,
+                         SigtermInjector, corrupt_checkpoint)
+from repro.configs.registry import get_smoke_config
+from repro.core import (CheckpointWriteFault, FaultPlan, HostDeath,
+                        PreemptionFault)
+from repro.data.pipeline import DataConfig
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, init_state
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import ElasticController, choose_mesh
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.step import (TrainState, abstract_train_state,
+                              train_state_shardings)
+from repro.train.straggler import (StragglerDetector, TelemetryBuffer,
+                                   predicted_rebalance_gain)
+
+KEY = jax.random.PRNGKey(0)
+
+needs_mesh8 = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs XLA_FLAGS device_count>=8")
+
+
+def _tiny_state():
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    opt_cfg = AdamWConfig()
+    params = model.init(KEY)
+    return cfg, model, opt_cfg, TrainState(params=params,
+                                           opt=init_state(opt_cfg, params))
+
+
+def _abstract(state):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint I/O faults: retry absorbs, exhaustion surfaces, atomicity holds
+# ---------------------------------------------------------------------------
+
+def test_ckpt_io_fault_absorbed_by_retry(tmp_path):
+    _, _, _, state = _tiny_state()
+    inj = CheckpointIOFaults(FaultPlan(
+        checkpoint_faults=(CheckpointWriteFault(1),)))
+    mgr = CheckpointManager(str(tmp_path), retries=1, io_check=inj)
+    mgr.save(1, state, extra={"data_step": 1}, blocking=True)
+    assert inj.attempts == 2          # first attempt failed, retry landed
+    assert mgr.latest_step() == 1
+    restored, extra = mgr.restore(_abstract(state))
+    assert extra["data_step"] == 1
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ckpt_io_fault_exhausts_retries_blocking(tmp_path):
+    _, _, _, state = _tiny_state()
+    inj = CheckpointIOFaults(FaultPlan(checkpoint_faults=(
+        CheckpointWriteFault(1), CheckpointWriteFault(2))))
+    mgr = CheckpointManager(str(tmp_path), retries=1, io_check=inj)
+    with pytest.raises(RuntimeError, match="async checkpoint failed"):
+        mgr.save(1, state, blocking=True)
+    assert inj.attempts == 2
+    # atomicity: a failed save leaves no step dir and no .tmp litter
+    assert mgr.steps() == []
+    assert list(mgr.dir.glob("*.tmp-*")) == []
+
+
+def test_ckpt_io_fault_async_surfaces_on_wait(tmp_path):
+    _, _, _, state = _tiny_state()
+    inj = CheckpointIOFaults(FaultPlan(checkpoint_faults=(
+        CheckpointWriteFault(1), CheckpointWriteFault(2),
+        CheckpointWriteFault(3))))
+    mgr = CheckpointManager(str(tmp_path), retries=2, io_check=inj)
+    mgr.save(1, state, blocking=False)
+    with pytest.raises(RuntimeError, match="async checkpoint failed"):
+        mgr.wait()
+    assert inj.attempts == 3 and mgr.steps() == []
+
+
+def test_trainer_wires_retry_config(tmp_path):
+    cfg = get_smoke_config("minitron-4b")
+    model = Model(cfg)
+    t = Trainer(model, AdamWConfig(),
+                DataConfig(vocab_size=cfg.vocab_size, seq_len=8,
+                           global_batch=2),
+                LoopConfig(total_steps=1, ckpt_dir=str(tmp_path),
+                           ckpt_retries=3, ckpt_backoff_s=0.0))
+    assert t.ckpt.retries == 3
+
+
+# ---------------------------------------------------------------------------
+# corruption: sha256 catches flipped bytes, manifests fail at parse
+# ---------------------------------------------------------------------------
+
+def test_corrupt_leaf_fails_loudly(tmp_path):
+    _, _, _, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, state, blocking=True)
+    corrupt_checkpoint(str(tmp_path), 3, target="leaf", leaf_index=2)
+    with pytest.raises(ValueError,
+                       match=r"checkpoint corruption: leaf 2"):
+        mgr.restore(_abstract(state))
+
+
+def test_corrupt_manifest_fails_at_parse(tmp_path):
+    _, _, _, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, state, blocking=True)
+    corrupt_checkpoint(str(tmp_path), 3, target="manifest")
+    with pytest.raises(json.JSONDecodeError):
+        mgr.restore(_abstract(state))
+
+
+def test_manifest_carries_sha256_and_presha_restores(tmp_path):
+    """Every leaf is hashed; stripping the hashes (a pre-sha256 checkpoint)
+    must still restore — the check is forward-compatible, not a lockout."""
+    _, _, _, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state, blocking=True)
+    mf = tmp_path / "step_00000001" / "manifest.json"
+    manifest = json.loads(mf.read_text())
+    assert all(len(leaf["sha256"]) == 64 for leaf in manifest["leaves"])
+    for leaf in manifest["leaves"]:
+        del leaf["sha256"]
+    mf.write_text(json.dumps(manifest))
+    restored, _ = mgr.restore(_abstract(state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# gc_incomplete: orphaned .tmp dirs are swept and never shadow completes
+# ---------------------------------------------------------------------------
+
+def test_gc_incomplete_sweeps_orphans_on_restart(tmp_path):
+    _, _, _, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, state, blocking=True)
+    # crash mid-save: one tmp for the same step, one for a LATER step
+    same = tmp_path / "step_00000003.tmp-111"
+    later = tmp_path / "step_00000005.tmp-222"
+    for d in (same, later):
+        d.mkdir()
+        (d / "arr_00000.npy").write_bytes(b"garbage")
+    # even before gc, tmp dirs are invisible to step discovery: the
+    # half-written step 5 must not shadow the complete step 3
+    assert mgr.steps() == [3] and mgr.latest_step() == 3
+    mgr2 = CheckpointManager(str(tmp_path))       # restart → gc
+    assert not same.exists() and not later.exists()
+    assert mgr2.latest_step() == 3
+    restored, _ = mgr2.restore(_abstract(state))  # complete dir untouched
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# SIGTERM: real signal → step-boundary flag → final checkpoint → exact resume
+# ---------------------------------------------------------------------------
+
+def test_sigterm_preemption_resumes_exactly(tmp_path):
+    cfg = get_smoke_config("llama3-8b")
+    model = Model(cfg)
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=2)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=4, seed=5)
+
+    def trainer(ckpt_dir, total=6):
+        return Trainer(model, opt_cfg, data_cfg,
+                       LoopConfig(total_steps=total, ckpt_every=100,
+                                  ckpt_dir=str(ckpt_dir), log_every=100))
+
+    # uninterrupted reference
+    t_ref = trainer(tmp_path / "ref")
+    state_ref = t_ref.run()
+
+    # deliver a real SIGTERM at step 3; the handler flips the flag, the
+    # in-flight step completes, a final blocking checkpoint runs
+    inj = SigtermInjector(FaultPlan(preemptions=(PreemptionFault(3),)))
+    old_term = signal.getsignal(signal.SIGTERM)
+    old_int = signal.getsignal(signal.SIGINT)
+    try:
+        t1 = trainer(tmp_path / "chaos")
+        t1.install_signal_handlers()
+        t1.run(on_step=inj)
+    finally:
+        signal.signal(signal.SIGTERM, old_term)
+        signal.signal(signal.SIGINT, old_int)
+    assert inj.delivered == [3]
+    assert t1._preempted
+    assert t1.ckpt.latest_step() == 3             # checkpointed at the flag
+    assert t1.pipeline.state.step == 3            # 3 batches consumed
+
+    # resume: same step, no lost or repeated samples
+    t2 = trainer(tmp_path / "chaos")
+    state_res = t2.run()
+    assert t2.start_step == 3
+    assert t2.pipeline.state.step == 6 == t_ref.pipeline.state.step
+    for a, b in zip(jax.tree.leaves(state_ref.params),
+                    jax.tree.leaves(state_res.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# serve: preempt a straggling prefill at a by_blocks boundary
+# ---------------------------------------------------------------------------
+
+def _fp32(cfg):
+    return dataclasses.replace(cfg, param_dtype="float32",
+                               compute_dtype="float32")
+
+
+def test_prefill_preemption_residual_bounded():
+    """max_blocks stops at a block boundary; the only overshoot is the block
+    in flight, bounded by growth/(1+growth) of the processed prefix."""
+    from repro.serve.prefill import ChunkedPrefill
+    cfg = _fp32(get_smoke_config("llama3-8b"))
+    model = Model(cfg)
+    params = model.init(KEY)
+    S = 512
+    toks = (np.arange(S, dtype=np.int32)[None, :] % 50) + 3
+    pf = ChunkedPrefill(model, first_block=32, growth=2.0, align=32,
+                        max_block=512)
+    cache = model.init_cache(1, S)
+    logits, cache, st = pf.run(params, toks, cache, max_blocks=3)
+    assert st.preempted and st.blocks == 3
+    assert st.next_start == st.tokens == 32 + 64 + 128
+    assert st.last_block <= (2.0 / 3.0) * st.tokens     # growth/(1+growth)
+    # resume from the boundary: the cache already holds the prefix
+    logits2, cache, st2 = pf.run(params, toks, cache, start=st.next_start)
+    assert not st2.preempted
+    assert st.tokens + st2.tokens == S
+    # exactness: same logits as an unpreempted prefill
+    full_logits, _, full_st = pf.run(params, toks, model.init_cache(1, S))
+    assert not full_st.preempted and full_st.tokens == S
+    np.testing.assert_allclose(np.asarray(logits2), np.asarray(full_logits),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_engine_preemption_matches_unpreempted():
+    """A block budget makes long prefills yield; the residual resumes with
+    priority and the finished outputs are identical to no preemption."""
+    from repro.serve.engine import Engine, EngineConfig, Request
+    cfg = _fp32(get_smoke_config("llama3-8b"))
+    model = Model(cfg)
+    params = model.init(KEY)
+
+    def reqs():
+        return [Request(rid=i,
+                        prompt=(np.arange(120 + i, dtype=np.int32) % 50) + 3,
+                        max_new=8) for i in range(2)]
+
+    base = Engine(model, params, EngineConfig(max_batch=2, eos_id=7))
+    for r in reqs():
+        base.submit(r)
+    done_base = base.step()
+    assert len(done_base) == 2
+
+    pre = Engine(model, params, EngineConfig(max_batch=2, eos_id=7,
+                                             prefill_block_budget=1))
+    for r in reqs():
+        pre.submit(r)
+    empty_steps = 0
+    done_pre = []
+    for _ in range(12):
+        out = pre.step()
+        if out:
+            done_pre = out
+            break
+        assert pre._residual is not None      # yielded, residual stashed
+        empty_steps += 1
+    assert empty_steps >= 1                   # it really was preempted
+    assert len(done_pre) == 2
+    for a, b in zip(done_base, done_pre):
+        assert a.rid == b.rid
+        np.testing.assert_array_equal(a.result, b.result)
+
+
+def test_engine_residual_has_priority_over_admissions():
+    from repro.serve.engine import Engine, EngineConfig, Request
+    cfg = _fp32(get_smoke_config("llama3-8b"))
+    model = Model(cfg)
+    params = model.init(KEY)
+    eng = Engine(model, params, EngineConfig(max_batch=2, eos_id=7,
+                                             prefill_block_budget=1))
+    eng.submit(Request(rid=0,
+                       prompt=(np.arange(120, dtype=np.int32) % 50) + 3,
+                       max_new=4))
+    assert eng.step() == []                   # preempted
+    # a new request arrives while the residual is parked
+    eng.submit(Request(rid=1, prompt=np.arange(8, dtype=np.int32) + 3,
+                       max_new=4))
+    finished = []
+    for _ in range(12):
+        finished.extend(r.rid for r in eng.step())
+        if len(finished) == 2:
+            break
+    assert finished == [0, 1]                 # residual first, then rid 1
+
+
+# ---------------------------------------------------------------------------
+# mesh8 tier: kill a host mid-step and survive it
+# ---------------------------------------------------------------------------
+
+@needs_mesh8
+def test_mesh8_kill_host_elastic_recovery(tmp_path):
+    """The full elastic cycle on 8 host devices (2 hosts x 4):
+
+    uninterrupted 6-step reference on a 2x4 mesh  vs  a run where host 1
+    vanishes with step 5 in flight (last checkpoint: step 4).  Straggler
+    telemetry + the simulated policy justify eviction; ``choose_mesh``
+    re-meshes over the 4 survivors; restore reshards the step-4 checkpoint
+    through host memory onto the new mesh; resume replays step 5 and
+    finishes — final params match the uninterrupted run and the data
+    counter proves zero lost or repeated samples."""
+    from repro.dist.sharding import mesh_context
+
+    cfg = _fp32(get_smoke_config("llama3-8b"))
+    model = Model(cfg)
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=2)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=4, seed=11)
+    TOTAL = 6
+
+    def trainer(ckpt_dir):
+        return Trainer(model, opt_cfg, data_cfg,
+                       LoopConfig(total_steps=TOTAL, ckpt_every=2,
+                                  ckpt_dir=str(ckpt_dir), log_every=100))
+
+    # --- reference: uninterrupted on the full 2-host mesh -----------------
+    mesh8 = choose_mesh(8, prefer_model=4)
+    assert mesh8.shape["data"] == 2 and mesh8.shape["model"] == 4
+    t_ref = trainer(tmp_path / "ref")
+    with mesh_context(mesh8):
+        state_ref = t_ref.run()
+    assert t_ref.pipeline.state.step == TOTAL
+
+    # --- chaos: host 1 (devices 4..7) dies with step 5 in flight ----------
+    plan = FaultPlan(host_deaths=(HostDeath(host=1, at_step=5,
+                                            devices_per_host=4),))
+    t1 = trainer(tmp_path / "chaos")
+    with mesh_context(mesh8):
+        with pytest.raises(HostLost) as ei:
+            t1.run(on_step=HostDeathInjector(plan))
+    assert ei.value.host == 1 and ei.value.step == 5
+    t1.ckpt.wait()                    # drain the async step-4 write
+    assert t1.ckpt.latest_step() == 4          # step 5 died with the host
+
+    # --- eviction justified: EWMA flags the host, the simulated policy ----
+    # says rebalancing onto survivors is worth >=1.3x ----------------------
+    telemetry = TelemetryBuffer(num_replicas=2)  # one DP replica per host
+    detector = StragglerDetector(threshold=1.4, patience=3)
+    evict = None
+    for _ in range(3):
+        telemetry.record_all([0.1, 0.5])      # host 1 straggled pre-death
+        evict = detector.check(telemetry)
+    assert evict == 1
+    gain = predicted_rebalance_gain(list(telemetry.ewma))
+    assert gain >= 1.3
+
+    # --- re-mesh over survivors, reshard through host memory --------------
+    survivors = jax.devices()[:4]
+    ctl = ElasticController(prefer_model=4)
+    new_mesh = ctl.remesh(survivors)
+    assert new_mesh.size == 4 and new_mesh.shape["model"] == 4
+    t2 = trainer(tmp_path / "chaos")
+    sshard = train_state_shardings(cfg, model, opt_cfg, new_mesh)
+    state, extra = ctl.reshard_state(t2.ckpt,
+                                     abstract_train_state(model, opt_cfg),
+                                     sshard)
+    leaf = jax.tree.leaves(state.params)[0]
+    assert set(leaf.sharding.device_set) <= set(survivors)
+
+    # --- resume: replay the lost step, finish on the small mesh -----------
+    t2.pipeline.state.step = int(extra["data_step"])
+    t2.start_step = t2.ckpt.latest_step()
+    assert t2.start_step == 4 and t2.pipeline.state.step == 4
+    with mesh_context(new_mesh):
+        state_b = t2.run(state)
+    assert t2.pipeline.state.step == TOTAL == t_ref.pipeline.state.step
+    for a, b in zip(jax.tree.leaves(state_ref.params),
+                    jax.tree.leaves(state_b.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-5, rtol=2e-4)
