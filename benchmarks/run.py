@@ -23,7 +23,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (all_scan, fannkuch, find_first, moe_dispatch, recovery,
-                   roofline, sort_adaptors, sort_compare, task_counts)
+                   roofline, serve_load, sort_adaptors, sort_compare,
+                   task_counts)
     from .common import header, reset, write_json
 
     # module name -> (module, JSON stem); sort benches share one trajectory
@@ -37,6 +38,7 @@ def main() -> None:
         "moe_dispatch": (moe_dispatch, "moe_dispatch"),  # sort dispatch
         "roofline": (roofline, "roofline"),              # §Roofline summary
         "recovery": (recovery, "recovery"),              # fault recovery cost
+        "serve_load": (serve_load, "serve"),             # continuous batching
     }
     header()
     failed = []

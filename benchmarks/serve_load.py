@@ -1,0 +1,196 @@
+"""Continuous batching vs the synchronous batch engine under bursty,
+heavy-tailed traffic — the BENCH_serve.json trajectory.
+
+A seeded generator emits a trace with the two properties that break static
+batching: bursty arrivals (≈35% of gaps are zero — requests pile up, then
+silence) and heavy-tailed prompt/output lengths (Pareto prompts, a long
+``max_new`` tail).  Both engines replay the SAME wall-clock arrival trace;
+the gaps are scaled by the measured per-token decode cost so the trace
+stresses the scheduler, not the host's absolute speed.
+
+What the synchronous engine loses on this trace is structural: every
+admitted batch pads to its longest prompt, decodes to its largest
+``max_new``, and blocks the queue until the whole batch retires
+(head-of-line).  The continuous engine retires each slot at its own EOS or
+budget, backfills the freed lane immediately, and interleaves chunked
+prefill between decode ticks — plus its decode shapes are fixed, so the hot
+loop never recompiles.
+
+Wall-clock ratios cannot be pinned exactly across machines, so the pinned
+rows are booleans recomputed per run: goodput ratio ≥ 1.3×, p99 latency
+improved, and — timing-independent, hence exact — both engines' tokens
+equal serving every request one at a time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .common import emit
+
+EOS = 7
+SEED = 0
+N_REQUESTS = 28
+MAX_BATCH = 4
+MAX_SEQ = 224
+GOODPUT_BAR = 1.3
+
+
+def _model():
+    import jax
+    from repro.configs.registry import get_smoke_config
+    from repro.models.model import Model
+    cfg = get_smoke_config("llama3-8b")
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    return model, params
+
+
+def _trace(rng: np.random.RandomState, n: int, vocab: int, spt: float
+           ) -> Tuple[List, List[float]]:
+    """(request specs, arrival offsets in seconds).  Pareto prompt lengths,
+    heavy-tailed max_new, bursty gaps in units of measured decode time."""
+    specs = []
+    t = 0.0
+    arrivals = []
+    for i in range(n):
+        plen = int(np.clip(8 * (1.0 + rng.pareto(1.1)), 8, 96))
+        max_new = int(rng.choice([4, 8, 12, 24, 48],
+                                 p=[0.35, 0.25, 0.20, 0.12, 0.08]))
+        prompt = rng.randint(3, vocab, size=plen).astype(np.int32)
+        specs.append((i, prompt, max_new))
+        gap = 0.0 if rng.rand() < 0.35 else float(rng.exponential(6.0)) * spt
+        t += gap
+        arrivals.append(t)
+    return specs, arrivals
+
+
+def _requests(specs) -> List:
+    from repro.serve.engine import Request
+    return [Request(rid=i, prompt=p, max_new=m) for i, p, m in specs]
+
+
+def _pending(eng) -> bool:
+    if hasattr(eng, "pending"):
+        return eng.pending
+    return bool(eng.queue) or eng._residual is not None
+
+
+def _replay(eng, reqs: List, arrivals: List[float]) -> Tuple[Dict, float]:
+    """Feed the arrival trace in wall-clock time; returns (done, makespan)."""
+    done: Dict[int, object] = {}
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(reqs) or _pending(eng):
+        now = time.perf_counter() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            reqs[i].t_submit = t0 + arrivals[i]
+            eng.submit(reqs[i])
+            i += 1
+        if not _pending(eng):
+            time.sleep(max(0.0, arrivals[i] - now))
+            continue
+        for r in eng.step():
+            done[r.rid] = r
+    return done, time.perf_counter() - t0
+
+
+def _latencies(done: Dict) -> np.ndarray:
+    return np.asarray(sorted(r.t_done - r.t_submit for r in done.values()))
+
+
+def run() -> None:
+    from repro.serve.engine import ContinuousEngine, Engine, EngineConfig
+
+    model, params = _model()
+    vocab = model.cfg.vocab_size
+    sync = Engine(model, params, EngineConfig(
+        max_batch=MAX_BATCH, eos_id=EOS, max_seq=MAX_SEQ))
+    cont = ContinuousEngine(model, params, EngineConfig(
+        max_batch=MAX_BATCH, eos_id=EOS, max_seq=MAX_SEQ,
+        decode_tick=8, prefill_block_budget=4))
+
+    # Warm both engines on a same-distribution trace (arrivals compressed to
+    # zero) so the timed replay measures scheduling, not first-touch jit —
+    # the sync engine still pays any shape-diversity compiles its batching
+    # produces, which is part of what the trace measures.
+    warm_specs, _ = _trace(np.random.RandomState(SEED + 1), 10, vocab, 0.0)
+    _replay(sync, _requests(warm_specs), [0.0] * len(warm_specs))
+    _replay(cont, _requests(warm_specs), [0.0] * len(warm_specs))
+    spt = max(cont.telemetry.decode_s_per_token, 1e-6)
+
+    specs, arrivals = _trace(np.random.RandomState(SEED), N_REQUESTS,
+                             vocab, spt)
+    # one untimed replay of the real trace first: the batch compositions it
+    # produces compile whatever shapes the timed replay will reuse
+    _replay(sync, _requests(specs), arrivals)
+    _replay(cont, _requests(specs), arrivals)
+    sync_done, sync_make = _replay(sync, _requests(specs), arrivals)
+    cont_done, cont_make = _replay(cont, _requests(specs), arrivals)
+
+    sync_toks = sum(len(r.result) for r in sync_done.values())
+    cont_toks = sum(len(r.result) for r in cont_done.values())
+    sync_good = sync_toks / sync_make
+    cont_good = cont_toks / cont_make
+    ratio = cont_good / sync_good
+    emit("serve/load/goodput_continuous_vs_sync", cont_make * 1e6,
+         f"ratio={ratio:.2f}x cont={cont_good:.1f}tok/s "
+         f"sync={sync_good:.1f}tok/s (>= {GOODPUT_BAR}x bar)",
+         pinned_ints=["meets_bar_130"],
+         meets_bar_130=int(ratio >= GOODPUT_BAR),
+         ratio_x100=int(ratio * 100),
+         cont_goodput_tok_s=cont_good, sync_goodput_tok_s=sync_good,
+         cont_makespan_s=cont_make, sync_makespan_s=sync_make,
+         cont_tokens=cont_toks, sync_tokens=sync_toks,
+         requests=N_REQUESTS)
+
+    slat, clat = _latencies(sync_done), _latencies(cont_done)
+    sp50, sp99 = np.percentile(slat, [50, 99])
+    cp50, cp99 = np.percentile(clat, [50, 99])
+    emit("serve/load/p99_latency", cp99 * 1e6,
+         f"cont_p50={cp50:.3f}s cont_p99={cp99:.3f}s "
+         f"sync_p50={sp50:.3f}s sync_p99={sp99:.3f}s",
+         pinned_ints=["p99_improved"],
+         p99_improved=int(cp99 < sp99),
+         cont_p50_s=float(cp50), cont_p99_s=float(cp99),
+         sync_p50_s=float(sp50), sync_p99_s=float(sp99))
+
+    # Correctness is timing-independent (greedy decode, row-independent
+    # batches), so exact equality against serve-one-at-a-time is pinned.
+    ref_eng = Engine(model, params, EngineConfig(
+        max_batch=1, eos_id=EOS, max_seq=MAX_SEQ))
+    refs: Dict[int, np.ndarray] = {}
+    for req in _requests(specs):
+        ref_eng.submit(req)
+        while _pending(ref_eng):
+            for r in ref_eng.step():
+                refs[r.rid] = np.asarray(r.result)
+    matches = all(
+        np.array_equal(refs[i], np.asarray(sync_done[i].result))
+        and np.array_equal(refs[i], np.asarray(cont_done[i].result))
+        for i in range(N_REQUESTS))
+    emit("serve/load/correctness_mixed_lengths", 0.0,
+         f"matches_one_at_a_time={int(matches)} over {N_REQUESTS} "
+         f"mixed-length requests",
+         pinned_ints=["matches_one_at_a_time"],
+         matches_one_at_a_time=int(matches))
+
+    snap = cont.telemetry.snapshot()
+    emit("serve/load/telemetry", spt * 1e6,
+         f"ticks={snap['ticks']} admissions={snap['admissions']} "
+         f"preemptions={snap['prefill_preemptions']} "
+         f"deferred_pages={snap['deferred_pages']} "
+         f"cap_peak={snap['cap_live_peak']}",
+         **{k: v for k, v in snap.items()})
+
+
+if __name__ == "__main__":
+    from .common import header
+    header()
+    run()

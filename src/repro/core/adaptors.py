@@ -289,17 +289,41 @@ class Cap(Adaptor):
     decremented by :meth:`on_finish` — matching the paper: "counts the active
     number of tasks and refuses division when the number reaches a threshold.
     This also decrements the counter as the tasks finish."
+
+    Two optional hooks make the cap *live* (the serving engine's admission
+    control drives both; defaults keep the paper semantics bit-identical):
+
+    * ``threshold_fn`` — a zero-arg callable consulted on every division
+      decision; the effective threshold is ``min(threshold, threshold_fn())``,
+      so external telemetry (cache headroom, measured decode cost) can shrink
+      the cap below its static ceiling without rebuilding the adaptor stack.
+    * ``on_event`` — called as ``on_event(kind, live)`` with kind in
+      {"divide", "finish"} and the post-event live-task count, every time the
+      shared counter changes.  Clones share the hook, so one observer sees
+      the whole tree.
     """
 
     base: Divisible
     threshold: int
     counter: _SharedCounter = dataclasses.field(default_factory=_SharedCounter)
+    threshold_fn: Optional[Any] = None
+    on_event: Optional[Any] = None
+
+    def live_threshold(self) -> int:
+        if self.threshold_fn is None:
+            return self.threshold
+        return min(self.threshold, max(1, int(self.threshold_fn())))
+
+    def _notify(self, kind: str) -> None:
+        if self.on_event is not None:
+            self.on_event(kind, self.counter.value)
 
     def should_be_divided(self) -> bool:
-        return self.counter.value < self.threshold and self.base.should_be_divided()
+        return (self.counter.value < self.live_threshold()
+                and self.base.should_be_divided())
 
     def should_divide(self, ctx: StealContext) -> bool:
-        if self.counter.value >= self.threshold:
+        if self.counter.value >= self.live_threshold():
             return False
         if isinstance(self.base, Adaptor):
             return self.base.should_divide(ctx)
@@ -307,6 +331,7 @@ class Cap(Adaptor):
 
     def _split(self, parts):
         self.counter.value += 1  # one task became two
+        self._notify("divide")
         l, r = parts
         return (_rewrap(self, l, counter=self.counter),
                 _rewrap(self, r, counter=self.counter))
@@ -319,6 +344,7 @@ class Cap(Adaptor):
 
     def on_finish(self) -> None:
         self.counter.value = max(0, self.counter.value - 1)
+        self._notify("finish")
         super().on_finish()
 
 

@@ -106,13 +106,19 @@ def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
 
+    # A *traced* q_offset (chunked prefill compiles once per chunk length,
+    # not once per position) forfeits plan-time tile skipping: the causal
+    # window is then enforced purely by the in-scan mask over the full kv
+    # extent.  A static int keeps the block-level FLOP skipping.
+    static_offset = isinstance(q_offset, int)
     outs = []
     for iq in range(n_q):
         q0 = iq * q_chunk
         cq = min(q_chunk, Sq - q0)
         qc = q[:, q0:q0 + cq].transpose(0, 2, 3, 1, 4)  # (B,KV,G,Cq,hd)
         # causal window for this q chunk: kv positions [0, q_offset+q0+cq)
-        k_hi = min(Sk, q_offset + q0 + cq) if causal else Sk
+        k_hi = min(Sk, q_offset + q0 + cq) if (causal and static_offset) \
+            else Sk
         n_k = (k_hi + kv_chunk - 1) // kv_chunk
         q_pos = q_offset + q0 + jnp.arange(cq)
 

@@ -294,16 +294,23 @@ class Model:
         return cache
 
     def prefill_chunk(self, params: Params, tokens: jnp.ndarray, cache: Any,
-                      pos0: int) -> Tuple[jnp.ndarray, Any]:
+                      pos0, *, all_logits: bool = False
+                      ) -> Tuple[jnp.ndarray, Any]:
         """One by_blocks prefill chunk: tokens (B, c) at positions
-        [pos0, pos0+c).  Returns (last-token logits, updated cache).
-        ``pos0`` is static — by_blocks yields O(log S) distinct shapes."""
+        [pos0, pos0+c).  Returns (logits, updated cache); logits are the
+        last position's (B, V) by default, or the whole chunk's (B, c, V)
+        with ``all_logits=True`` — mixed-length batches gather each row's
+        last *real* position from these.  ``pos0`` is a traced scalar:
+        compilation is keyed on the chunk length only, so the by_blocks
+        schedule compiles one program per distinct chunk size."""
         from .transformer import layer_prefill_chunk
         cfg = self.cfg
         B, c = tokens.shape
         x = self._embed_in(params, tokens)
         if cfg.is_encdec:
-            x = x + params["dec_pos"][pos0:pos0 + c].astype(cfg.dtype())
+            dec_pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"],
+                                                   pos0, c, 0)
+            x = x + dec_pos.astype(cfg.dtype())
 
         new_cache: Dict[str, Any] = {}
         if self.prefix_specs:
@@ -331,7 +338,10 @@ class Model:
                                               cache["stage"]))
         new_cache["stage"] = new_stage
         x = self._norm(params["final_norm"], x)
-        logits = self._logits_head(params, x[:, -1:])[:, 0]
+        if all_logits:
+            logits = self._logits_head(params, x)          # (B, c, V)
+        else:
+            logits = self._logits_head(params, x[:, -1:])[:, 0]
         return logits, new_cache
 
     def encode_to_cache(self, params: Params, batch: Dict[str, jnp.ndarray],

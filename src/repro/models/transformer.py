@@ -276,13 +276,18 @@ def layer_decode(cfg: ModelConfig, spec: LayerSpec, lp: Params,
 
 def layer_prefill_chunk(cfg: ModelConfig, spec: LayerSpec, lp: Params,
                         x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
-                        pos0: int, *, moe_strategy: str = "einsum"
+                        pos0, *, moe_strategy: str = "einsum"
                         ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Process chunk positions [pos0, pos0+c) against cached history.
 
     x: (B, c, D).  Attention sees cache[:pos0] + intra-chunk causal; new KV
     is written into the cache.  SSM states continue from the cache.  ``pos0``
-    is static per by_blocks chunk (O(log S) distinct compilations).
+    is a *traced* scalar: one compilation per distinct chunk length ``c``,
+    reused at every position (the by_blocks schedule then compiles O(log S)
+    programs total, not O(log²S)).  The price is that attention runs over the
+    full cache width with the causal mask doing the windowing — positions
+    beyond pos0+c are masked to exactly zero probability, so the result is
+    bit-equal to the sliced-history form.
     """
     norm = _norm(cfg)
     B, c, D = x.shape
@@ -295,15 +300,13 @@ def layer_prefill_chunk(cfg: ModelConfig, spec: LayerSpec, lp: Params,
         new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos0, 1)
         new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos0, 1)
         new_cache["k"], new_cache["v"] = new_k, new_v
-        k_hist = new_k[:, :pos0 + c]
-        v_hist = new_v[:, :pos0 + c]
-        S_hist = pos0 + c
-        qc, kc = attn_chunk_sizes(c, S_hist)
-        if c <= 256 and S_hist <= 1024:
-            o = plain_attention(q, k_hist, v_hist, causal=True,
+        S_max = new_k.shape[1]
+        qc, kc = attn_chunk_sizes(c, S_max)
+        if c <= 256 and S_max <= 1024:
+            o = plain_attention(q, new_k, new_v, causal=True,
                                 q_offset=pos0)
         else:
-            o = blockwise_attention(q, k_hist, v_hist, causal=True,
+            o = blockwise_attention(q, new_k, new_v, causal=True,
                                     q_chunk=qc, kv_chunk=kc, q_offset=pos0)
         y = jnp.einsum("bse,ed->bsd", o.reshape(B, c, -1), lp["mixer"]["wo"])
     elif spec.kind == "mla":
@@ -353,15 +356,19 @@ def layer_prefill_chunk(cfg: ModelConfig, spec: LayerSpec, lp: Params,
 
 def _mla_chunk_absorbed(params: Params, cfg: ModelConfig, h: jnp.ndarray,
                         latent: jnp.ndarray, positions: jnp.ndarray,
-                        pos0: int, c: int) -> jnp.ndarray:
-    """MLA chunk attention in absorbed form (latent-history scoring)."""
+                        pos0, c: int) -> jnp.ndarray:
+    """MLA chunk attention in absorbed form (latent-history scoring).
+
+    ``pos0`` may be traced — scoring runs over the full latent buffer and the
+    causal mask (exact −inf → exactly-zero softmax weight) does the history
+    windowing, so compilation is keyed on the chunk length only."""
     from .attention import NEG_INF
     from .layers import apply_rope, rope_table
     B = h.shape[0]
     H = cfg.num_heads
     nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
-    S_hist = pos0 + c
+    S_hist = latent.shape[1]
     scale = 1.0 / math.sqrt(nd + rd)
 
     q = jnp.einsum("bsd,de->bse", h, params["wq"]).reshape(B, c, H, nd + rd)
@@ -372,8 +379,7 @@ def _mla_chunk_absorbed(params: Params, cfg: ModelConfig, h: jnp.ndarray,
     w_uk = params["wkv_up"].reshape(r, H, nd + vd)[..., :nd]
     q_abs = jnp.einsum("bchn,rhn->bchr", q_nope, w_uk)
 
-    lat = latent[:, :S_hist]
-    c_hist, rope_hist = lat[..., :r], lat[..., r:]
+    c_hist, rope_hist = latent[..., :r], latent[..., r:]
     logits = (jnp.einsum("bchr,bsr->bhcs", q_abs, c_hist,
                          preferred_element_type=jnp.float32)
               + jnp.einsum("bchr,bsr->bhcs", q_rope, rope_hist,

@@ -1,1 +1,19 @@
-"""repro.serve"""
+"""repro.serve — serving engines built from Kvik scheduling policies.
+
+See DESIGN.md in this directory for the continuous-batching architecture.
+"""
+
+from .early_exit import (DecodeStats, decode_until_eos, make_decode_block,
+                         make_decode_tick)
+from .engine import (AdmissionSimulator, ContinuousEngine, Engine,
+                     EngineConfig, EngineTelemetry, Request)
+from .kvcache import PageTable, alloc_cache, cache_bytes, cache_slot_insert
+from .prefill import ChunkedPrefill, PrefillStats
+
+__all__ = [
+    "AdmissionSimulator", "ChunkedPrefill", "ContinuousEngine",
+    "DecodeStats", "Engine", "EngineConfig", "EngineTelemetry", "PageTable",
+    "PrefillStats", "Request", "alloc_cache", "cache_bytes",
+    "cache_slot_insert", "decode_until_eos", "make_decode_block",
+    "make_decode_tick",
+]

@@ -73,20 +73,70 @@ def make_decode_block(model: Model, eos_id: int):
     return dispatch
 
 
+def make_decode_tick(model: Model, eos_id: int):
+    """Decode tick for the continuous-batching engine: like
+    ``make_decode_block`` but each slot also carries ``remaining`` — its
+    per-request ``max_new`` budget — so rows retire independently on EOS
+    *or* budget exhaustion while the rest of the batch keeps stepping.
+
+    Returns fn(params, tokens, cache, lengths, finished, remaining, n) →
+    (tokens, cache, lengths, finished, remaining, out (B, n), wasted (B,)).
+    Emitted tokens for rows that were already finished (or empty slots) are
+    -1; ``lengths`` only advances for live rows, so slot KV stays aligned.
+    """
+
+    def tick(params, tokens, cache, lengths, finished, remaining, *, n: int):
+        B = tokens.shape[0]
+
+        def body(i, carry):
+            tokens, cache, lengths, finished, remaining, out, wasted = carry
+            live = ~finished
+            logits, cache = model.decode_step(params, tokens, cache, lengths)
+            nxt = jnp.argmax(logits[:, :model.cfg.vocab_size],
+                             axis=-1).astype(jnp.int32)
+            wasted = wasted + finished.astype(jnp.int32)
+            out = out.at[:, i].set(jnp.where(finished, -1, nxt))
+            remaining = remaining - live.astype(jnp.int32)
+            finished = finished | (nxt == eos_id) | (remaining <= 0)
+            lengths = lengths + live.astype(jnp.int32)
+            tokens = jnp.where(live, nxt, tokens)
+            return (tokens, cache, lengths, finished, remaining, out, wasted)
+
+        out0 = jnp.full((B, n), -1, jnp.int32)
+        wasted0 = jnp.zeros((B,), jnp.int32)
+        return jax.lax.fori_loop(
+            0, n, body,
+            (tokens, cache, lengths, finished, remaining, out0, wasted0))
+
+    jits: Dict[int, Callable] = {}
+
+    def dispatch(params, tokens, cache, lengths, finished, remaining, n: int):
+        if n not in jits:
+            jits[n] = jax.jit(partial(tick, n=n), donate_argnums=2)
+        return jits[n](params, tokens, cache, lengths, finished, remaining)
+
+    return dispatch
+
+
 def decode_until_eos(model: Model, params: Any, first_tokens: jnp.ndarray,
                      cache: Any, lengths: jnp.ndarray, *, eos_id: int,
                      max_new: int = 256, use_blocks: bool = True,
                      first_block: Optional[int] = None,
-                     growth: float = 2.0
+                     growth: float = 2.0, blockfn: Optional[Callable] = None
                      ) -> Tuple[jnp.ndarray, Any, DecodeStats]:
     """Greedy-decode until every sequence hits EOS (or max_new).
 
     use_blocks=False is the naive schedule (one block of max_new) — the
     paper's "without blocks" baseline, kept for the benchmark.
+
+    Callers that decode repeatedly should build ``blockfn`` once with
+    :func:`make_decode_block` and pass it in — the per-block jits live in
+    the blockfn's cache, so a fresh one per call recompiles every block.
     """
     B = first_tokens.shape[0]
     stats = DecodeStats()
-    blockfn = make_decode_block(model, eos_id)
+    if blockfn is None:
+        blockfn = make_decode_block(model, eos_id)
     tokens = first_tokens
     finished = tokens == eos_id
     outs = []
@@ -108,7 +158,12 @@ def decode_until_eos(model: Model, params: Any, first_tokens: jnp.ndarray,
     gen = jnp.concatenate(outs, axis=1)
     useful = int((gen >= 0).sum())
     stats.useful_tokens = useful
-    stats.wasted_tokens = stats.steps_run * B - useful
+    # The kernel's per-block waste counter is the ground truth; it equals
+    # steps_run·B − useful by construction (each step emits either a useful
+    # token or a −1 for an already-finished row) — tested in test_serve.
+    stats.wasted_tokens = wasted_total
+    assert wasted_total == stats.steps_run * B - useful, \
+        (wasted_total, stats.steps_run, B, useful)
     return gen, cache, stats
 
 

@@ -1,23 +1,29 @@
-"""A batched serving engine composed from Kvik policies.
+"""Serving engines composed from Kvik policies.
 
-* admission: the ``cap`` adaptor bounds live requests (batch slots); with
-  ``EngineConfig.admission="simulate"`` the batch size is chosen by running
-  candidate admissions on the unified virtual-time runtime
-  (:class:`AdmissionSimulator`) — the same engine that validates the
-  schedulers — trading padding waste against per-batch overhead;
-* prefill: ``ChunkedPrefill`` (by_blocks, interruptible);
-* decode: ``decode_until_eos`` (find_first early exit);
-* batching: requests of compatible length prefill together (divide_at cuts
-  the queue — the same Divisible machinery end to end).
+Two engines share the policy stack:
 
-Synchronous reference implementation: real deployments would pipeline these
-phases; the policy layer is the part this paper contributes, and it is
-identical either way.
+* :class:`Engine` — the synchronous reference: admit a batch, prefill it
+  (by_blocks, interruptible), decode it to EOS (find_first early exit),
+  return.  Simple, and the baseline the benchmark measures against.
+* :class:`ContinuousEngine` — the continuous-batching hot loop: a persistent
+  decode batch with per-slot state (true per-request lengths, per-request
+  ``max_new``, per-slot EOS retirement).  Freed slots are backfilled by
+  admitting queued prompts whose chunked prefill is interleaved *between*
+  decode ticks via the by_blocks preemption point — decode never waits on a
+  straggling prefill.  Admission is the ``cap`` adaptor driven by live
+  telemetry (measured decode cost, page headroom, queue depth) instead of
+  the virtual-time simulator, and the :class:`~repro.serve.kvcache.PageTable`
+  actually accounts cache pages per request.
+
+Both engines handle mixed-length batches correctly: prefill gathers each
+row's last *real* logit (not the last padded position) and decode runs with
+true per-row lengths.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -28,7 +34,9 @@ import numpy as np
 from ..core import (Cap, CostModel, Runtime, StaticPartitionPolicy,
                     WorkRange, cap)
 from ..models.model import Model
-from .early_exit import DecodeStats, decode_until_eos
+from .early_exit import (DecodeStats, decode_until_eos, make_decode_block,
+                         make_decode_tick)
+from .kvcache import PageTable, cache_slot_insert
 from .prefill import ChunkedPrefill
 
 
@@ -72,6 +80,10 @@ class Request:
     max_new: int = 64
     result: Optional[np.ndarray] = None
     stats: Optional[DecodeStats] = None
+    # wall-clock latency markers (set by the engines)
+    t_submit: Optional[float] = None
+    t_first: Optional[float] = None   # first token available
+    t_done: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -85,6 +97,80 @@ class EngineConfig:
     # a straggling (long-prompt) prefill is preempted at the next by_blocks
     # boundary and its residual requeued — None disables preemption
     prefill_block_budget: Optional[int] = None
+    # continuous engine: decode steps per tick, cache page accounting
+    decode_tick: int = 8
+    page_size: int = 32
+    num_pages: Optional[int] = None   # None → full capacity
+
+
+@dataclasses.dataclass
+class EngineTelemetry:
+    """Live measurements the admission cap consults (EWMA-smoothed)."""
+
+    decode_s_per_token: float = 0.0
+    prefill_s_per_block: float = 0.0
+    prefill_s_per_token: float = 0.0
+    pages_per_request: float = 0.0
+    ticks: int = 0
+    decode_steps: int = 0
+    useful_decoded: int = 0
+    admissions: int = 0
+    prefill_preemptions: int = 0
+    deferred_pages: int = 0       # admissions deferred on page exhaustion
+    retired: int = 0
+    cap_divides: int = 0
+    cap_finishes: int = 0
+    cap_live_peak: int = 0
+    ewma: float = 0.25
+
+    def _mix(self, old: float, new: float) -> float:
+        return new if old == 0.0 else (1 - self.ewma) * old + self.ewma * new
+
+    def observe_decode(self, useful: int, seconds: float, steps: int) -> None:
+        self.ticks += 1
+        self.decode_steps += steps
+        self.useful_decoded += useful
+        self.decode_s_per_token = self._mix(self.decode_s_per_token,
+                                            seconds / max(1, useful))
+
+    def observe_prefill(self, blocks: int, tokens: int,
+                        seconds: float) -> None:
+        if blocks:
+            self.prefill_s_per_block = self._mix(self.prefill_s_per_block,
+                                                 seconds / blocks)
+        if tokens:
+            self.prefill_s_per_token = self._mix(self.prefill_s_per_token,
+                                                 seconds / tokens)
+
+    def observe_admission(self, pages: int) -> None:
+        self.admissions += 1
+        self.pages_per_request = self._mix(self.pages_per_request,
+                                           float(pages))
+
+    def on_cap_event(self, kind: str, live: int) -> None:
+        if kind == "divide":
+            self.cap_divides += 1
+        else:
+            self.cap_finishes += 1
+        self.cap_live_peak = max(self.cap_live_peak, live)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "decode_s_per_token": self.decode_s_per_token,
+            "prefill_s_per_block": self.prefill_s_per_block,
+            "prefill_s_per_token": self.prefill_s_per_token,
+            "pages_per_request": self.pages_per_request,
+            "ticks": self.ticks,
+            "decode_steps": self.decode_steps,
+            "useful_decoded": self.useful_decoded,
+            "admissions": self.admissions,
+            "prefill_preemptions": self.prefill_preemptions,
+            "deferred_pages": self.deferred_pages,
+            "retired": self.retired,
+            "cap_divides": self.cap_divides,
+            "cap_finishes": self.cap_finishes,
+            "cap_live_peak": self.cap_live_peak,
+        }
 
 
 @dataclasses.dataclass
@@ -99,6 +185,8 @@ class _PrefillResidual:
     cache: Any
     pos: int
     max_new: int
+    row_lengths: List[int]
+    gathered: Optional[jnp.ndarray]   # per-row last-real logits so far
 
 
 class Engine:
@@ -108,12 +196,15 @@ class Engine:
         self.cfg = cfg
         self.prefiller = ChunkedPrefill(model, first_block=32, align=32,
                                         max_block=256)
+        self._blockfn = make_decode_block(model, cfg.eos_id)
         self.queue: List[Request] = []
         self.admission = cap(WorkRange(0, 1 << 30), cfg.max_batch)
         self.admission_sim = AdmissionSimulator(lanes=cfg.max_batch)
         self._residual: Optional[_PrefillResidual] = None
 
     def submit(self, req: Request) -> None:
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _next_batch(self) -> List[Request]:
@@ -137,47 +228,301 @@ class Engine:
         can monopolize the engine."""
         if self._residual is not None:
             r, self._residual = self._residual, None
-            return self._prefill_and_decode(r.batch, r.toks, r.cache,
-                                            r.max_new, start=r.pos)
+            return self._prefill_and_decode(
+                r.batch, r.toks, r.cache, r.max_new, r.row_lengths,
+                start=r.pos, gathered=r.gathered)
         batch = self._next_batch()
         if not batch:
             return []
         B = len(batch)
-        S = max(len(r.prompt) for r in batch)
+        row_lengths = [len(r.prompt) for r in batch]
+        S = max(row_lengths)
         S = max(32, 1 << (S - 1).bit_length())
+        max_new = max(r.max_new for r in batch)
+        if S + max_new > self.cfg.max_seq:
+            raise ValueError(
+                f"batch needs {S} (padded prompt) + {max_new} (max_new) = "
+                f"{S + max_new} cache positions but EngineConfig.max_seq is "
+                f"{self.cfg.max_seq}; raise max_seq or shrink the request")
         toks = np.full((B, S), self.cfg.pad_id, np.int32)
         for i, r in enumerate(batch):
             toks[i, :len(r.prompt)] = r.prompt     # left-aligned prompts
-        max_new = max(r.max_new for r in batch)
         cache = self.model.init_cache(B, S + max_new)
         return self._prefill_and_decode(batch, jnp.asarray(toks), cache,
-                                        max_new, start=0)
+                                        max_new, row_lengths, start=0)
 
     def _prefill_and_decode(self, batch: List[Request], toks: jnp.ndarray,
-                            cache: Any, max_new: int, *, start: int
+                            cache: Any, max_new: int,
+                            row_lengths: List[int], *, start: int,
+                            gathered: Optional[jnp.ndarray] = None
                             ) -> List[Request]:
         B, S = toks.shape
         logits, cache, pstats = self.prefiller.run(
             self.params, toks, cache, start=start,
-            max_blocks=self.cfg.prefill_block_budget)
+            max_blocks=self.cfg.prefill_block_budget,
+            row_lengths=row_lengths, gathered=gathered)
         if pstats.preempted:      # requeue the bounded residual, yield
             self._residual = _PrefillResidual(
                 batch=batch, toks=toks, cache=cache,
-                pos=pstats.next_start, max_new=max_new)
+                pos=pstats.next_start, max_new=max_new,
+                row_lengths=row_lengths, gathered=logits)
             return []
-        lengths = jnp.asarray([S] * B, jnp.int32)
+        lengths = jnp.asarray(row_lengths, jnp.int32)
         first = jnp.argmax(
             logits[:, :self.model.cfg.vocab_size], -1).astype(jnp.int32)
-        gen, cache, dstats = decode_until_eos(
-            self.model, self.params, first, cache, lengths,
-            eos_id=self.cfg.eos_id, max_new=max_new)
-        gen_np = np.asarray(gen)
+        first_np = np.asarray(first)
+        now = time.perf_counter()
+        for r in batch:
+            r.t_first = now
+        if max_new > 1:           # `first` already counts toward max_new
+            gen, cache, dstats = decode_until_eos(
+                self.model, self.params, first, cache, lengths,
+                eos_id=self.cfg.eos_id, max_new=max_new - 1,
+                blockfn=self._blockfn)
+            gen_np = np.asarray(gen)
+        else:
+            gen_np = np.full((B, 0), -1, np.int32)
+            dstats = DecodeStats(all_finished=True)
+        now = time.perf_counter()
         for i, r in enumerate(batch):
             row = gen_np[i]
-            row = row[row >= 0][:r.max_new]
-            r.result = np.concatenate([np.asarray(first)[i:i + 1], row])
-            r.stats = dstats
+            row = row[row >= 0][:max(0, r.max_new - 1)]
+            r.result = np.concatenate(
+                [first_np[i:i + 1], row.astype(np.int32)])
+            useful = len(r.result)
+            r.stats = DecodeStats(
+                blocks=dstats.blocks, steps_run=dstats.steps_run,
+                useful_tokens=useful,
+                wasted_tokens=dstats.steps_run - (useful - 1),
+                all_finished=bool((r.result == self.cfg.eos_id).any()))
+            r.t_done = now
         return batch
 
 
-__all__ = ["Engine", "EngineConfig", "Request", "AdmissionSimulator"]
+@dataclasses.dataclass
+class _Slot:
+    """One occupied decode-batch lane."""
+
+    req: Request
+    first: int                    # first token (from prefill logits)
+    lease: Cap                    # admission-cap clone; on_finish() retires
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    eos_hit: bool = False
+    steps: int = 0                # decode steps run while occupied
+    wasted: int = 0               # post-finish steps inside ticks
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """The (single) in-flight chunked prefill, resumable across steps."""
+
+    req: Request
+    lease: Cap
+    toks: jnp.ndarray             # (1, S_pad)
+    cache: Any                    # batch=1 scratch cache, width max_seq
+    pos: int = 0
+    gathered: Optional[jnp.ndarray] = None
+
+
+class ContinuousEngine:
+    """Continuous batching: persistent slots, interleaved chunked prefill,
+    telemetry-driven admission.  Call :meth:`step` in a loop; each step
+    (1) tries to admit one queued request (cap + page gate),
+    (2) runs at most a budget of prefill blocks on the in-flight prompt,
+    (3) runs one decode tick over the live slots,
+    (4) retires finished slots and returns their requests.
+    """
+
+    def __init__(self, model: Model, params: Any, cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.prefiller = ChunkedPrefill(model, first_block=32, align=32,
+                                        max_block=256)
+        self.queue: List[Request] = []
+        self.telemetry = EngineTelemetry()
+        B = cfg.max_batch
+        per_slot = -(-cfg.max_seq // cfg.page_size)
+        self.pages = PageTable(cfg.page_size,
+                               cfg.num_pages or B * per_slot)
+        # The admission cap: the shared counter starts at 1 (the root task
+        # itself), so a threshold of max_batch+1 admits max_batch leases.
+        self._admission: Cap = Cap(
+            WorkRange(0, 1 << 30), B + 1,
+            threshold_fn=self._admission_limit,
+            on_event=self.telemetry.on_cap_event)
+        self.cache = model.init_cache(B, cfg.max_seq)
+        self.lengths = jnp.zeros((B,), jnp.int32)
+        self.tokens = jnp.zeros((B,), jnp.int32)
+        self.finished = jnp.ones((B,), bool)      # empty lanes are finished
+        self.remaining = jnp.zeros((B,), jnp.int32)
+        self.slots: List[Optional[_Slot]] = [None] * B
+        self._job: Optional[_PrefillJob] = None
+        self._tick = make_decode_tick(model, cfg.eos_id)
+
+    # ---------------------------------------------------------------- admit
+    def _slot_span(self, req: Request) -> int:
+        """Worst-case cache positions the request can touch: the padded
+        prefill width or true length + budget, whichever is larger."""
+        pad = max(32, -(-len(req.prompt) // 32) * 32)
+        return max(pad, len(req.prompt) + req.max_new)
+
+    def submit(self, req: Request) -> None:
+        span = self._slot_span(req)
+        if span > self.cfg.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} needs {span} cache positions but "
+                f"EngineConfig.max_seq is {self.cfg.max_seq}")
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def _admission_limit(self) -> int:
+        """Telemetry-driven cap: active requests + how many more the page
+        headroom can hold at the measured per-request footprint.  +1 for
+        the root the shared counter starts with."""
+        active = sum(s is not None for s in self.slots)
+        active += 1 if self._job is not None else 0
+        ppr = self.telemetry.pages_per_request
+        est = (max(1, int(math.ceil(ppr))) if ppr > 0
+               else max(1, self.pages.pages_needed(self.cfg.max_seq // 4)))
+        headroom = len(self.pages.free) // est
+        return active + headroom + 1
+
+    def _try_admit(self) -> None:
+        if self._job is not None or not self.queue:
+            return
+        if not any(s is None for s in self.slots):
+            return
+        if not self._admission.should_be_divided():
+            return
+        req = self.queue[0]
+        pages = self.pages.allocate(req.rid, self._slot_span(req))
+        if pages is None:         # page exhaustion → defer admission
+            self.telemetry.deferred_pages += 1
+            return
+        self.queue.pop(0)
+        lease, rest = self._admission.divide_at(1)
+        self._admission = rest
+        self.telemetry.observe_admission(len(pages))
+        S_pad = max(32, -(-len(req.prompt) // 32) * 32)
+        toks = np.full((1, S_pad), self.cfg.pad_id, np.int32)
+        toks[0, :len(req.prompt)] = req.prompt
+        self._job = _PrefillJob(
+            req=req, lease=lease, toks=jnp.asarray(toks),
+            cache=self.model.init_cache(1, self.cfg.max_seq))
+
+    # -------------------------------------------------------------- prefill
+    def _prefill_budget(self) -> Optional[int]:
+        """Blocks of prefill one step may spend: the configured budget,
+        tightened so prefill work stays comparable to one decode tick's
+        wall time (decode ticks never wait on a straggling prefill)."""
+        budget = self.cfg.prefill_block_budget
+        t = self.telemetry
+        if t.decode_s_per_token > 0 and t.prefill_s_per_block > 0:
+            tick_wall = t.decode_s_per_token * self.cfg.decode_tick
+            balanced = max(1, int(tick_wall / t.prefill_s_per_block))
+            budget = balanced if budget is None else min(budget, balanced)
+        return budget
+
+    def _run_prefill(self) -> None:
+        job = self._job
+        if job is None:
+            return
+        t0 = time.perf_counter()
+        logits, cache, pstats = self.prefiller.run(
+            self.params, job.toks, job.cache, start=job.pos,
+            max_blocks=self._prefill_budget(),
+            row_lengths=[len(job.req.prompt)], gathered=job.gathered)
+        self.telemetry.observe_prefill(pstats.blocks, pstats.tokens,
+                                       time.perf_counter() - t0)
+        if pstats.preempted:
+            job.cache, job.pos, job.gathered = cache, pstats.next_start, \
+                logits
+            self.telemetry.prefill_preemptions += 1
+            return
+        # complete: install into the first free slot
+        slot = next(i for i, s in enumerate(self.slots) if s is None)
+        req = job.req
+        self.cache = cache_slot_insert(self.cache, cache, slot)
+        first = int(np.asarray(
+            jnp.argmax(logits[0, :self.model.cfg.vocab_size])))
+        req.t_first = time.perf_counter()
+        done = (first == self.cfg.eos_id) or (req.max_new <= 1)
+        L = len(req.prompt)
+        self.lengths = self.lengths.at[slot].set(L)
+        self.tokens = self.tokens.at[slot].set(first)
+        self.finished = self.finished.at[slot].set(done)
+        self.remaining = self.remaining.at[slot].set(req.max_new - 1)
+        self.slots[slot] = _Slot(req=req, first=first, lease=job.lease,
+                                 eos_hit=(first == self.cfg.eos_id))
+        self._job = None
+
+    # --------------------------------------------------------------- decode
+    def _decode_tick(self) -> None:
+        occupied = [i for i, s in enumerate(self.slots) if s is not None]
+        if not occupied:
+            return
+        fin = np.asarray(self.finished)
+        if all(fin[i] for i in occupied):
+            return
+        n = self.cfg.decode_tick
+        t0 = time.perf_counter()
+        (self.tokens, self.cache, self.lengths, self.finished,
+         self.remaining, out, wasted) = self._tick(
+            self.params, self.tokens, self.cache, self.lengths,
+            self.finished, self.remaining, n)
+        out_np = np.asarray(out)          # blocks until the tick is done
+        self.telemetry.observe_decode(int((out_np >= 0).sum()),
+                                      time.perf_counter() - t0, n)
+        wasted_np = np.asarray(wasted)
+        for i in occupied:
+            s = self.slots[i]
+            valid = out_np[i][out_np[i] >= 0]
+            s.emitted.extend(int(t) for t in valid)
+            s.steps += n
+            s.wasted += int(wasted_np[i])
+            if (valid == self.cfg.eos_id).any():
+                s.eos_hit = True
+
+    # --------------------------------------------------------------- retire
+    def _retire(self) -> List[Request]:
+        fin = np.asarray(self.finished)
+        done: List[Request] = []
+        now = time.perf_counter()
+        for i, s in enumerate(self.slots):
+            if s is None or not fin[i]:
+                continue
+            r = s.req
+            toks = [s.first] + s.emitted
+            r.result = np.asarray(toks[:r.max_new], np.int32)
+            r.stats = DecodeStats(
+                blocks=-(-s.steps // max(1, self.cfg.decode_tick)),
+                steps_run=s.steps,
+                useful_tokens=len(r.result),
+                wasted_tokens=s.steps - (len(r.result) - 1),
+                all_finished=s.eos_hit)
+            r.t_done = now
+            self.pages.release(r.rid)
+            s.lease.on_finish()
+            self.slots[i] = None
+            self.telemetry.retired += 1
+            done.append(r)
+        return done
+
+    # ----------------------------------------------------------------- loop
+    @property
+    def pending(self) -> bool:
+        return (bool(self.queue) or self._job is not None
+                or any(s is not None for s in self.slots))
+
+    def step(self) -> List[Request]:
+        self._try_admit()
+        self._run_prefill()
+        self._decode_tick()
+        return self._retire()
+
+
+__all__ = ["Engine", "ContinuousEngine", "EngineConfig", "EngineTelemetry",
+           "Request", "AdmissionSimulator"]

@@ -83,4 +83,24 @@ class PageTable:
         return 1.0 - len(self.free) / self.num_pages
 
 
-__all__ = ["cache_bytes", "alloc_cache", "PageTable"]
+def cache_slot_insert(big: Any, small: Any, slot: int) -> Any:
+    """Write a batch=1 cache pytree into row ``slot`` of a batched cache.
+
+    Both caches must share the Model.init_cache layout and max_seq width:
+    'prefix' leaves carry batch on axis 0, 'stage' leaves (stacked over
+    repeats) carry batch on axis 1.  The whole slot row is overwritten —
+    including positions past the new request's prefix — so any stale state
+    a previous occupant (or an idle tick) left behind is erased.
+    """
+    out: Dict[str, Any] = {}
+    if "prefix" in big:
+        out["prefix"] = [
+            {k: b.at[slot].set(s[k][0]) for k, b in layer.items()}
+            for layer, s in zip(big["prefix"], small["prefix"])]
+    out["stage"] = [
+        {k: b.at[:, slot].set(s[k][:, 0]) for k, b in layer.items()}
+        for layer, s in zip(big["stage"], small["stage"])]
+    return out
+
+
+__all__ = ["cache_bytes", "alloc_cache", "PageTable", "cache_slot_insert"]

@@ -7,13 +7,15 @@ batch reshuffling.  Exactly the paper's schedule: O(log S) blocks, wasted
 work on interruption bounded by growth/(1+growth).
 
 Block sizes are aligned (``align``) so each distinct chunk length compiles
-once; the geometric sequence means at most O(log S) compilations.
+once; the geometric sequence means at most O(log S) compilations.  The block
+start position is a *traced* scalar — compilation is keyed on chunk length
+(and the all-logits flag) only, never on position, so the jit cache stays
+bounded across arbitrarily many prompts at arbitrary resume offsets.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -40,23 +42,37 @@ class ChunkedPrefill:
         self.model = model
         self.policy = ByBlocks(first=first_block, growth=growth, align=align,
                                cap=max_block)
-        self._jits: Dict[Tuple[int, int], Callable] = {}
+        self._jits: Dict[Tuple[int, bool], Callable] = {}
+        self.trace_count = 0      # one trace per distinct (chunk len, mode)
 
-    def _chunk_fn(self, c: int, pos0: int) -> Callable:
-        key = (c, pos0)
+    def _chunk_fn(self, c: int, all_logits: bool) -> Callable:
+        key = (c, all_logits)
         if key not in self._jits:
-            self._jits[key] = jax.jit(
-                partial(self.model.prefill_chunk, pos0=pos0),
-                donate_argnums=2)
+            def chunk(params, toks, cache, pos0, *, _al=all_logits):
+                self.trace_count += 1   # runs at trace time only
+                return self.model.prefill_chunk(params, toks, cache, pos0,
+                                                all_logits=_al)
+            self._jits[key] = jax.jit(chunk, donate_argnums=2)
         return self._jits[key]
 
     def run(self, params: Any, tokens: jnp.ndarray, cache: Any, *,
             batch: Optional[Dict[str, jnp.ndarray]] = None,
             should_cancel: Callable[[], bool] = lambda: False,
-            start: int = 0, max_blocks: Optional[int] = None
+            start: int = 0, max_blocks: Optional[int] = None,
+            row_lengths: Optional[Any] = None,
+            gathered: Optional[jnp.ndarray] = None
             ) -> Tuple[Optional[jnp.ndarray], Any, PrefillStats]:
-        """tokens: (B, S).  Returns (last logits | None-if-cancelled, cache,
+        """tokens: (B, S).  Returns (logits | None-if-cancelled, cache,
         stats).  ``batch`` carries modality stubs for cross-attn models.
+
+        Without ``row_lengths`` the returned logits are the last *padded*
+        position's (B, V) — correct only for uniform-length batches.  With
+        ``row_lengths`` (true per-row prompt lengths), each chunk computes
+        all-position logits and the row's last *real* position is gathered
+        as it streams past, so mixed-length batches get the right
+        next-token distribution per row.  ``gathered`` carries partial
+        gathers across a preemption (pass back the logits this method
+        returned with ``stats.preempted``).
 
         ``start`` resumes a previously preempted prefill at that position
         (the cache must already hold positions < start — i.e. the cache this
@@ -70,11 +86,23 @@ class ChunkedPrefill:
         if batch is not None and start == 0:
             cache = self.model.encode_to_cache(params, batch, cache)
         stats = PrefillStats()
-        logits = None
+        logits = gathered
+        sel = None
+        if row_lengths is not None:
+            sel = jnp.asarray(row_lengths, jnp.int32) - 1     # (B,)
         for blk in self.policy.blocks(SeqWork(start, S)):
             c = blk.size()
-            fn = self._chunk_fn(c, blk.start)
-            logits, cache = fn(params, tokens[:, blk.start:blk.stop], cache)
+            fn = self._chunk_fn(c, row_lengths is not None)
+            out, cache = fn(params, tokens[:, blk.start:blk.stop], cache,
+                            jnp.int32(blk.start))
+            if sel is None:
+                logits = out
+            else:
+                local = jnp.clip(sel - blk.start, 0, c - 1)
+                hit = ((sel >= blk.start) & (sel < blk.stop))[:, None]
+                rows = out[jnp.arange(B), local]              # (B, V)
+                prev = jnp.zeros_like(rows) if logits is None else logits
+                logits = jnp.where(hit, rows, prev)
             stats.blocks += 1
             stats.tokens += c
             stats.last_block = c

@@ -11,7 +11,8 @@ import pytest
 from repro.configs.registry import ARCH_IDS, get_smoke_config
 from repro.models.model import Model
 from repro.serve.early_exit import decode_until_eos
-from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve.engine import (ContinuousEngine, Engine, EngineConfig,
+                                Request)
 from repro.serve.prefill import ChunkedPrefill
 
 KEY = jax.random.PRNGKey(0)
@@ -20,6 +21,33 @@ KEY = jax.random.PRNGKey(0)
 def fp32(cfg):
     return dataclasses.replace(cfg, param_dtype="float32",
                                compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = fp32(get_smoke_config("llama3-8b"))
+    model = Model(cfg)
+    params = model.init(KEY)
+    return model, params
+
+
+def _mixed_requests(vocab, lens=(9, 33, 17, 26), max_news=(6, 9, 7, 8)):
+    rng = np.random.RandomState(0)
+    return [Request(rid=i,
+                    prompt=rng.randint(3, vocab, size=n).astype(np.int32),
+                    max_new=mn)
+            for i, (n, mn) in enumerate(zip(lens, max_news))]
+
+
+def _serve_one_at_a_time(model, params, reqs, **cfg_kw):
+    out = []
+    for r in reqs:
+        eng = Engine(model, params,
+                     EngineConfig(max_batch=1, **cfg_kw))
+        eng.submit(Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new))
+        (done,) = eng.step()
+        out.append(np.asarray(done.result))
+    return out
 
 
 @pytest.mark.parametrize("arch", ["llama3-8b", "chatglm3-6b",
@@ -114,6 +142,230 @@ def test_engine_end_to_end():
     done = eng.step()
     assert len(done) == 3             # cap admission
     for r in done:
-        assert r.result is not None and 1 <= len(r.result) <= 13
+        assert r.result is not None and 1 <= len(r.result) <= 12
     done2 = eng.step()
     assert len(done2) == 2
+
+
+def test_engine_mixed_lengths_match_one_at_a_time(smoke_model):
+    """Golden: a mixed-length batch decodes the same tokens as serving each
+    request alone — the padded-position bug would condition short rows on
+    pad tokens and diverge."""
+    model, params = smoke_model
+    reqs = _mixed_requests(model.cfg.vocab_size)
+    ref = _serve_one_at_a_time(model, params, reqs, eos_id=7, max_seq=256)
+    eng = Engine(model, params,
+                 EngineConfig(max_batch=4, eos_id=7, max_seq=256))
+    for r in reqs:
+        eng.submit(r)
+    done = {r.rid: r for r in eng.step()}
+    assert len(done) == len(reqs)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(done[i].result), ref[i])
+
+
+def test_engine_per_request_max_new_and_stats(smoke_model):
+    """Results are capped at each request's own max_new (not max_new+1, not
+    the batch max), and every request gets its own stats object."""
+    model, params = smoke_model
+    reqs = _mixed_requests(model.cfg.vocab_size,
+                           lens=(9, 20, 14), max_news=(3, 11, 1))
+    eng = Engine(model, params,
+                 EngineConfig(max_batch=3, eos_id=7, max_seq=256))
+    for r in reqs:
+        eng.submit(r)
+    done = {r.rid: r for r in eng.step()}
+    stats_ids = {id(done[i].stats) for i in range(3)}
+    assert len(stats_ids) == 3        # per-request, not shared
+    for i, r in enumerate(reqs):
+        assert 1 <= len(done[i].result) <= r.max_new
+        st = done[i].stats
+        assert st.useful_tokens == len(done[i].result)
+        assert st.wasted_tokens == st.steps_run - (st.useful_tokens - 1)
+    assert len(done[2].result) == 1   # max_new=1 → the first token only
+
+
+def test_prefill_compiles_once_per_chunk_size(smoke_model):
+    """The jit cache is keyed on chunk *length*, never position: re-runs,
+    resumes, and different start offsets reuse the same traces."""
+    model, params = smoke_model
+    cp = ChunkedPrefill(model, first_block=16, align=16, max_block=64)
+    toks = jax.random.randint(KEY, (1, 96), 1, model.cfg.vocab_size)
+    cp.run(params, toks, model.init_cache(1, 96))
+    n0 = cp.trace_count
+    assert n0 == 3                    # geometric blocks: 16, 32, 48
+
+    # same sizes at different positions: resume after preemption + a run
+    # starting mid-prompt — no new traces
+    _, cache, st = cp.run(params, toks, model.init_cache(1, 96),
+                          max_blocks=1)
+    assert st.preempted
+    cp.run(params, toks, cache, start=st.next_start)
+    cp.run(params, toks, model.init_cache(1, 96), start=16)
+    assert cp.trace_count == n0
+
+    # the all-logits (mixed-length gather) variant traces separately, and
+    # again only once per chunk size
+    cp.run(params, toks, model.init_cache(1, 96), row_lengths=[77])
+    n1 = cp.trace_count
+    assert n1 == n0 + 3
+    cp.run(params, toks, model.init_cache(1, 96), row_lengths=[50])
+    assert cp.trace_count == n1
+    assert len(cp._jits) == n1
+
+
+def test_decode_wasted_reconciliation(smoke_model):
+    """The kernel's per-block waste counter and the steps·B − useful formula
+    agree (decode_until_eos asserts it; exercise a mixed-finish batch with
+    EOS firing at a block boundary)."""
+    model, params = smoke_model
+    B, S = 4, 16
+    toks = jax.random.randint(KEY, (B, S), 3, model.cfg.vocab_size)
+    logits, cache = model.prefill(params, {"tokens": toks}, max_seq=S + 64)
+    first = jnp.argmax(logits[:, :model.cfg.vocab_size],
+                       -1).astype(jnp.int32)
+    lengths = jnp.full((B,), S, jnp.int32)
+    eos = int(first[0])               # row 0 finishes immediately
+    gen, _, stats = decode_until_eos(
+        model, params, first, cache, lengths, eos_id=eos, max_new=64,
+        use_blocks=True, first_block=4)
+    useful = int((np.asarray(gen) >= 0).sum())
+    assert stats.useful_tokens == useful
+    assert stats.wasted_tokens == stats.steps_run * B - useful
+    assert stats.wasted_tokens > 0    # row 0 idled while others decoded
+
+
+def test_engine_max_seq_loud_error(smoke_model):
+    """Requests that cannot fit the configured cache fail loudly instead of
+    silently allocating past max_seq."""
+    model, params = smoke_model
+    eng = Engine(model, params,
+                 EngineConfig(max_batch=1, eos_id=7, max_seq=64))
+    eng.submit(Request(rid=0, prompt=np.arange(50, dtype=np.int32) + 3,
+                       max_new=32))
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.step()
+    cont = ContinuousEngine(model, params,
+                            EngineConfig(max_batch=1, eos_id=7, max_seq=64))
+    with pytest.raises(ValueError, match="max_seq"):
+        cont.submit(Request(rid=1, prompt=np.arange(50, dtype=np.int32) + 3,
+                            max_new=32))
+
+
+def _drain(engine, max_steps=500):
+    out = {}
+    steps = 0
+    while engine.pending:
+        for r in engine.step():
+            out[r.rid] = r
+        steps += 1
+        assert steps < max_steps, "engine made no progress"
+    return out
+
+
+def test_continuous_engine_matches_one_at_a_time(smoke_model):
+    """Backfill correctness: 6 mixed-length requests through 3 slots emit
+    exactly the tokens each request gets when served alone."""
+    model, params = smoke_model
+    reqs = _mixed_requests(model.cfg.vocab_size,
+                           lens=(9, 33, 17, 51, 12, 40),
+                           max_news=(10, 6, 14, 8, 12, 5))
+    ref = _serve_one_at_a_time(model, params, reqs, eos_id=7, max_seq=256)
+    eng = ContinuousEngine(model, params,
+                           EngineConfig(max_batch=3, eos_id=7, max_seq=256,
+                                        decode_tick=4))
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new))
+    done = _drain(eng)
+    assert len(done) == len(reqs)
+    for i, r in enumerate(reqs):
+        res = np.asarray(done[i].result)
+        assert 1 <= len(res) <= r.max_new
+        np.testing.assert_array_equal(res, ref[i])
+        st = done[i].stats
+        assert st.useful_tokens == len(res)
+        assert st.wasted_tokens == st.steps_run - (st.useful_tokens - 1)
+    # slots, pages, and cap leases all return to empty
+    assert eng.telemetry.retired == len(reqs)
+    assert len(eng.pages.free) == eng.pages.num_pages
+    assert eng._admission.counter.value == 1
+
+
+def test_continuous_preempt_resume_under_backfill(smoke_model):
+    """A long prompt's chunked prefill is preempted every step
+    (budget=1 block) while decode keeps ticking; short requests admitted
+    behind it still finish first, and every result stays exact."""
+    model, params = smoke_model
+    rng = np.random.RandomState(1)
+    long_req = Request(rid=0, prompt=rng.randint(
+        3, model.cfg.vocab_size, size=130).astype(np.int32), max_new=12)
+    shorts = [Request(rid=i, prompt=rng.randint(
+        3, model.cfg.vocab_size, size=10 + i).astype(np.int32), max_new=4)
+        for i in (1, 2)]
+    reqs = [long_req] + shorts
+    # the sync reference pads prompts to a power of two (256 for 130),
+    # so it needs a wider cache; extra masked width cannot change tokens
+    ref = _serve_one_at_a_time(model, params, reqs, eos_id=7, max_seq=320)
+    eng = ContinuousEngine(
+        model, params,
+        EngineConfig(max_batch=2, eos_id=7, max_seq=192, decode_tick=2,
+                     prefill_block_budget=1))
+    order = []
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new))
+    done = {}
+    steps = 0
+    while eng.pending:
+        for r in eng.step():
+            done[r.rid] = r
+            order.append(r.rid)
+        steps += 1
+        assert steps < 500
+    assert eng.telemetry.prefill_preemptions >= 2   # 130 → ≥3 blocks
+    assert order[-1] == 0             # the long request retires last
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(done[i].result), ref[i])
+
+
+def test_continuous_page_exhaustion_defers_admission(smoke_model):
+    """When the page table cannot hold a request's worst-case span the
+    admission is deferred — and granted once a retirement frees pages."""
+    model, params = smoke_model
+    rng = np.random.RandomState(2)
+    small = Request(rid=0, prompt=rng.randint(
+        3, model.cfg.vocab_size, size=9).astype(np.int32), max_new=20)
+    big = Request(rid=1, prompt=rng.randint(
+        3, model.cfg.vocab_size, size=70).astype(np.int32), max_new=20)
+    eng = ContinuousEngine(
+        model, params,
+        EngineConfig(max_batch=2, eos_id=7, max_seq=128, decode_tick=4,
+                     page_size=32, num_pages=3))
+    eng.submit(small)                 # span 32 → 1 page
+    eng.submit(big)                   # span 96 → 3 pages: must wait
+    done = _drain(eng)
+    assert len(done) == 2
+    assert eng.telemetry.deferred_pages > 0
+    assert len(eng.pages.free) == 3   # all released
+    ref = _serve_one_at_a_time(model, params, [small, big],
+                               eos_id=7, max_seq=192)
+    for i in range(2):
+        np.testing.assert_array_equal(np.asarray(done[i].result), ref[i])
+
+
+def test_cap_live_threshold_and_events():
+    """The cap adaptor's serving hooks: threshold_fn shrinks the effective
+    cap without rebuilding the stack; on_event observes every counter
+    change across clones."""
+    from repro.core import Cap, WorkRange
+    events = []
+    limit = [10]
+    c = Cap(WorkRange(0, 100), 4, threshold_fn=lambda: limit[0],
+            on_event=lambda kind, live: events.append((kind, live)))
+    assert c.should_be_divided()
+    lease, rest = c.divide_at(10)     # counter 1 → 2
+    assert events == [("divide", 2)]
+    limit[0] = 2                      # telemetry tightens below the ceiling
+    assert not rest.should_be_divided()
+    lease.on_finish()                 # counter 2 → 1
+    assert events[-1] == ("finish", 1)
+    assert rest.should_be_divided()
