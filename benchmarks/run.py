@@ -23,8 +23,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (all_scan, fannkuch, find_first, moe_dispatch, recovery,
-                   roofline, serve_load, sort_adaptors, sort_compare,
-                   task_counts)
+                   roofline, serve_load, slo_load, sort_adaptors,
+                   sort_compare, task_counts)
     from .common import header, reset, write_json
 
     # module name -> (module, JSON stem); sort benches share one trajectory
@@ -39,6 +39,7 @@ def main() -> None:
         "roofline": (roofline, "roofline"),              # §Roofline summary
         "recovery": (recovery, "recovery"),              # fault recovery cost
         "serve_load": (serve_load, "serve"),             # continuous batching
+        "slo_load": (slo_load, "slo"),                   # SLO degradation
     }
     header()
     failed = []

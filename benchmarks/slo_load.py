@@ -1,0 +1,228 @@
+"""Multi-tenant SLO serving under 3× overload — the BENCH_slo.json rows.
+
+One seeded two-tenant trace (interactive / batch / background classes,
+arrivals compressed so the offered decode work is ~3× what the engine can
+drain in the arrival window) is replayed against the same ContinuousEngine
+twice: once under FIFO (the PR 8 behavior — every class waits behind every
+other, so overload collapses all classes uniformly) and once under the
+class-ranked PriorityServePolicy with deadline shedding.  A third replay
+hot-swaps FIFO → priority mid-run on a live engine.
+
+Wall-clock numbers cannot be pinned across machines (the trace is scaled by
+the measured per-token decode cost, like serve_load), so the pinned rows
+are recomputed booleans — the graceful-degradation invariants themselves:
+
+* interactive p99 under priority ≥2× better than under FIFO (a shed
+  request's latency is its time-to-drop: the user-visible wait);
+* every request the priority run sheds is batch/background — interactive
+  work never degrades first;
+* conservation: each run accounts every submitted rid exactly once
+  (served + shed, no losses, no duplicates);
+* the hot-swap replay's tokens all match serving each request one at a
+  time on the synchronous engine — exactness is preserved across a live
+  ``set_policy()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from .common import emit
+
+EOS = 7
+SEED = 0
+MAX_BATCH = 4
+MAX_SEQ = 224
+OVERLOAD = 3.0                 # offered work / drain capacity
+P99_BAR = 2.0
+
+
+def _model():
+    import jax
+    from repro.configs.registry import get_smoke_config
+    from repro.models.model import Model
+    cfg = get_smoke_config("llama3-8b")
+    cfg = dataclasses.replace(cfg, param_dtype="float32",
+                              compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    return model, params
+
+
+def _engine(model, params, policy=None, class_caps=None):
+    from repro.serve.engine import ContinuousEngine, EngineConfig
+    return ContinuousEngine(model, params, EngineConfig(
+        max_batch=MAX_BATCH, eos_id=EOS, max_seq=MAX_SEQ,
+        decode_tick=8, prefill_block_budget=4,
+        class_caps=class_caps), policy=policy)
+
+
+def _warmed(model, params, vocab, policy=None, class_caps=None):
+    """A fresh engine with its jit compiles already paid.
+
+    Each ContinuousEngine builds its own jitted decode tick, so a fresh
+    instance stalls ~1s on its first step — long enough to swamp any
+    deadline in the trace.  Drain one deadline-free request per prompt
+    shape before the replay clock starts."""
+    import dataclasses as _dc
+    from repro.chaos.serving import make_request
+    eng = _engine(model, params, policy, class_caps)
+    seen = set()
+    for it in _trace(1.0):
+        if it.prompt_len in seen:
+            continue
+        seen.add(it.prompt_len)
+        eng.submit(make_request(
+            _dc.replace(it, arrival=0.0, deadline_s=None), vocab, SEED))
+    while eng.pending:
+        eng.step()
+    return eng
+
+
+def _classes(span_s: float) -> Dict[str, Dict]:
+    """The two-tenant SLO mix.  Deadlines are fractions of the arrival
+    span: under ~3× overload the drain takes ~OVERLOAD spans, so batch and
+    background deadlines (well under one drain) must expire for late
+    arrivals, while the interactive deadline (2 spans) only binds when
+    interactive work is stuck behind other classes — i.e. under FIFO,
+    where a request arriving at ``a`` waits ~(OVERLOAD-1)·a behind the
+    backlog.  Interactive is ~20% of the offered work, so the priority
+    run serves it far inside one span."""
+    return {
+        "interactive": dict(n=8, prompt_len=12, max_new=8, priority=2,
+                            deadline_s=2.0 * span_s,
+                            tenants=("tenant-a", "tenant-b")),
+        "batch": dict(n=16, prompt_len=24, max_new=32,
+                      deadline_s=0.5 * span_s,
+                      tenants=("tenant-a", "tenant-b")),
+        "background": dict(n=8, prompt_len=24, max_new=48,
+                           deadline_s=0.35 * span_s,
+                           tenants=("tenant-b",)),
+    }
+
+
+def _trace(span_s: float):
+    from repro.chaos.serving import slo_mix_trace
+    return slo_mix_trace(SEED, span_s=span_s, classes=_classes(span_s))
+
+
+def _p99(latencies: List[float]) -> float:
+    return float(np.percentile(np.asarray(latencies), 99))
+
+
+def run() -> None:
+    from repro.chaos.serving import make_request, replay
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.slo import FifoServePolicy, PriorityServePolicy
+
+    model, params = _model()
+    vocab = model.cfg.vocab_size
+
+    # Calibrate the overload knob against this machine: drain the whole mix
+    # as one burst (deadline-free, arrivals at 0) on a pre-warmed engine and
+    # take the wall time as the engine's capacity for this work.  Offering
+    # the same work inside ``drain/OVERLOAD`` is then a ~3× overload by
+    # construction, however fast the host is.
+    burst = tuple(dataclasses.replace(it, arrival=0.0, deadline_s=None)
+                  for it in _trace(1.0))
+    cap_eng = _warmed(model, params, vocab)
+    t0 = time.perf_counter()
+    replay(cap_eng, burst, vocab=vocab, seed=SEED)
+    drain_s = time.perf_counter() - t0
+    spt = max(cap_eng.telemetry.decode_s_per_token, 1e-9)
+
+    classes = _classes(1.0)
+    n_requests = sum(c["n"] for c in classes.values())
+    span_s = drain_s / OVERLOAD
+    trace = _trace(span_s)
+
+    # -- FIFO baseline vs class-ranked priority on the SAME trace ----------
+    fifo_res = replay(_warmed(model, params, vocab, FifoServePolicy()),
+                      trace, vocab=vocab, seed=SEED)
+    # class caps keep one lane free of batch/background work, so an
+    # arriving interactive request never waits a full decode epoch for a
+    # slot — the per-class Cap adaptors doing real SLO isolation.
+    pri_eng = _warmed(model, params, vocab, PriorityServePolicy(),
+                      class_caps={"batch": 2, "background": 1})
+    pri_res = replay(pri_eng, trace, vocab=vocab, seed=SEED)
+
+    fifo_p99 = _p99(fifo_res.latencies("interactive"))
+    pri_p99 = _p99(pri_res.latencies("interactive"))
+    ratio = fifo_p99 / max(pri_p99, 1e-9)
+    emit("serve/slo/interactive_p99_vs_fifo", pri_p99 * 1e6,
+         f"ratio={ratio:.2f}x pri_p99={pri_p99:.3f}s "
+         f"fifo_p99={fifo_p99:.3f}s (>= {P99_BAR}x bar, {OVERLOAD:.0f}x "
+         f"overload)",
+         pinned_ints=["p99_ratio_ge_2x"],
+         p99_ratio_ge_2x=int(ratio >= P99_BAR),
+         ratio_x100=int(ratio * 100),
+         pri_p99_s=pri_p99, fifo_p99_s=fifo_p99,
+         span_s=span_s, overload=OVERLOAD, requests=n_requests)
+
+    shed_classes = sorted({r.slo for r in pri_res.shed})
+    purity = all(s in ("batch", "background") for s in shed_classes)
+    emit("serve/slo/shed_purity", 0.0,
+         f"shed={len(pri_res.shed)}/{n_requests} classes={shed_classes} "
+         f"by_tenant={pri_eng.telemetry.shed_by_tenant}",
+         pinned_ints=["shed_all_batch_background", "shed_nonzero"],
+         shed_all_batch_background=int(purity),
+         shed_nonzero=int(len(pri_res.shed) > 0),
+         shed=len(pri_res.shed), fifo_shed=len(fifo_res.shed),
+         shed_by_class={s: sum(1 for r in pri_res.shed if r.slo == s)
+                        for s in shed_classes})
+
+    conserved = (fifo_res.conserved(trace) and pri_res.conserved(trace)
+                 and not fifo_res.rejected and not pri_res.rejected)
+    emit("serve/slo/conservation", 0.0,
+         f"fifo={len(fifo_res.served)}+{len(fifo_res.shed)} "
+         f"pri={len(pri_res.served)}+{len(pri_res.shed)} of {n_requests}; "
+         f"zero lost or duplicated={int(conserved)}",
+         pinned_ints=["zero_lost_or_duplicated"],
+         zero_lost_or_duplicated=int(conserved))
+
+    # -- live hot-swap preserves exactness ---------------------------------
+    swap_eng = _warmed(model, params, vocab, FifoServePolicy())
+    swap_at = 4
+
+    def swap(step: int, eng) -> None:
+        if step == swap_at and eng.telemetry.policy_swaps == 0:
+            eng.set_policy(PriorityServePolicy())
+
+    swap_trace = tuple(dataclasses.replace(it, deadline_s=None)
+                       for it in _trace(span_s * 0.5))
+    swap_res = replay(swap_eng, swap_trace, vocab=vocab, seed=SEED,
+                      on_step=swap)
+    ref_eng = Engine(model, params, EngineConfig(
+        max_batch=1, eos_id=EOS, max_seq=MAX_SEQ))
+    refs: Dict[int, np.ndarray] = {}
+    for it in swap_trace:
+        ref_eng.submit(make_request(it, vocab, SEED))
+        while ref_eng.queue or ref_eng._residual is not None:
+            for r in ref_eng.step():
+                refs[r.rid] = np.asarray(r.result)
+    exact = (len(swap_res.served) == len(swap_trace)
+             and all(np.array_equal(refs[r.rid], np.asarray(r.result))
+                     for r in swap_res.served))
+    emit("serve/slo/hotswap_exactness", 0.0,
+         f"swapped at step {swap_at}, served={len(swap_res.served)}, "
+         f"exact vs one-at-a-time={int(exact)}",
+         pinned_ints=["exact_tokens_after_swap", "policy_swapped"],
+         exact_tokens_after_swap=int(exact),
+         policy_swapped=int(swap_eng.telemetry.policy_swaps >= 1))
+
+    snap = pri_eng.telemetry.snapshot()
+    emit("serve/slo/telemetry", spt * 1e6,
+         f"class_preemptions={snap['class_preemptions']} "
+         f"shed={snap['shed']} admissions={snap['admissions']} "
+         f"deferred_pages={snap['deferred_pages']}",
+         **{k: v for k, v in snap.items()})
+
+
+if __name__ == "__main__":
+    from .common import header
+    header()
+    run()

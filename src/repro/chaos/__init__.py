@@ -11,8 +11,12 @@ determinism guarantees.
 
 from .harness import (ChaosError, CheckpointIOFaults, HostDeathInjector,
                       HostLost, SigtermInjector, corrupt_checkpoint)
+from .serving import (ReplayResult, SlotDeathInjector, TraceItem,
+                      make_request, replay, slo_mix_trace)
 
 __all__ = [
     "ChaosError", "CheckpointIOFaults", "HostDeathInjector", "HostLost",
     "SigtermInjector", "corrupt_checkpoint",
+    "TraceItem", "ReplayResult", "SlotDeathInjector", "make_request",
+    "slo_mix_trace", "replay",
 ]

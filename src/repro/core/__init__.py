@@ -22,12 +22,13 @@ Public surface:
 """
 
 from .divisible import (Divisible, Producer, WorkRange, BatchWork, SeqWork,
-                        TileGrid2D, ZipDivisible, PermRange,
+                        TileGrid2D, ZipDivisible, WorkSet, PermRange,
                         total_permutations)
 from .adaptors import (Adaptor, StealContext, bound_depth, even_levels,
                        force_depth, size_limit, cap, join_context,
-                       thief_splitting, BoundDepth, EvenLevels, ForceDepth,
-                       SizeLimit, Cap, JoinContext, ThiefSplitting)
+                       thief_splitting, tagged, find_tag, BoundDepth,
+                       EvenLevels, ForceDepth, SizeLimit, Cap, JoinContext,
+                       ThiefSplitting, Tagged)
 from .plan import (Plan, PlanNode, MergeLevel, DigitPass, SortSchedule,
                    MULTI_TILE_LAUNCHES_PER_PASS, digit_passes, build_plan,
                    demand_split, geometric_blocks)
@@ -35,20 +36,21 @@ from .schedulers import (JoinScheduler, schedule_join, ByBlocks, by_blocks,
                          BlockStats, AdaptiveScheduler, adaptive)
 from .dnc import wrap_iter, WrappedIter, work_loop
 from .faults import (FaultPlan, WorkerDeath, Slowdown, CheckpointWriteFault,
-                     CorruptionFault, PreemptionFault, HostDeath)
+                     CorruptionFault, PreemptionFault, HostDeath, SlotDeath)
 from .runtime import CostModel, SimResult, Task, Runtime
 from .policies import (SchedulingPolicy, JoinPolicy, DepJoinPolicy,
                        AdaptivePolicy, StaticPartitionPolicy, ByBlocksPolicy,
-                       simulate)
+                       PriorityPolicy, DeadlinePolicy, simulate)
 from .simruntime import WorkStealingSim, AdaptiveSim, static_partition_sim
 
 __all__ = [
     "Divisible", "Producer", "WorkRange", "BatchWork", "SeqWork",
-    "TileGrid2D", "ZipDivisible", "PermRange", "total_permutations",
+    "TileGrid2D", "ZipDivisible", "WorkSet", "PermRange",
+    "total_permutations",
     "Adaptor", "StealContext", "bound_depth", "even_levels", "force_depth",
-    "size_limit", "cap", "join_context", "thief_splitting",
-    "BoundDepth", "EvenLevels", "ForceDepth", "SizeLimit", "Cap",
-    "JoinContext", "ThiefSplitting",
+    "size_limit", "cap", "join_context", "thief_splitting", "tagged",
+    "find_tag", "BoundDepth", "EvenLevels", "ForceDepth", "SizeLimit", "Cap",
+    "JoinContext", "ThiefSplitting", "Tagged",
     "Plan", "PlanNode", "MergeLevel", "DigitPass", "SortSchedule",
     "digit_passes", "MULTI_TILE_LAUNCHES_PER_PASS", "build_plan",
     "demand_split", "geometric_blocks",
@@ -56,9 +58,10 @@ __all__ = [
     "AdaptiveScheduler", "adaptive",
     "wrap_iter", "WrappedIter", "work_loop",
     "FaultPlan", "WorkerDeath", "Slowdown", "CheckpointWriteFault",
-    "CorruptionFault", "PreemptionFault", "HostDeath",
+    "CorruptionFault", "PreemptionFault", "HostDeath", "SlotDeath",
     "CostModel", "SimResult", "Task", "Runtime",
     "SchedulingPolicy", "JoinPolicy", "DepJoinPolicy", "AdaptivePolicy",
-    "StaticPartitionPolicy", "ByBlocksPolicy", "simulate",
+    "StaticPartitionPolicy", "ByBlocksPolicy", "PriorityPolicy",
+    "DeadlinePolicy", "simulate",
     "WorkStealingSim", "AdaptiveSim", "static_partition_sim",
 ]

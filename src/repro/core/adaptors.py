@@ -353,6 +353,62 @@ def cap(base: Divisible, threshold: int) -> Cap:
 
 
 # ---------------------------------------------------------------------------
+# tagged — SLO metadata riding the adaptor stack (priority / deadline / tenant)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Tagged(Adaptor):
+    """Attach scheduling metadata to a work descriptor without changing any
+    division decision: ``priority`` (higher = more urgent), an absolute
+    virtual-time ``deadline``, and a ``tenant`` label for accounting.
+
+    Both children of a division inherit the tag, so an adaptor stack like
+    ``cap(tagged(WorkRange(0, n), priority=2), 3)`` keeps its SLO identity
+    through arbitrary splitting.  :class:`~repro.core.policies.PriorityPolicy`
+    and :class:`~repro.core.policies.DeadlinePolicy` order their shared pool
+    by these fields; every other policy ignores them (the tag delegates all
+    Divisible decisions to its base), so tagging work is always safe.
+    """
+
+    base: Divisible
+    priority: int = 0
+    deadline: Optional[float] = None
+    tenant: str = "default"
+
+    def should_divide(self, ctx: StealContext) -> bool:
+        if isinstance(self.base, Adaptor):
+            return self.base.should_divide(ctx)
+        return self.base.should_be_divided()
+
+    def _split(self, parts):
+        l, r = parts
+        return (_rewrap(self, l), _rewrap(self, r))
+
+    def divide(self):
+        return self._split(self.base.divide())
+
+    def divide_at(self, index):
+        return self._split(self.base.divide_at(index))
+
+
+def tagged(base: Divisible, *, priority: int = 0,
+           deadline: Optional[float] = None,
+           tenant: str = "default") -> Tagged:
+    return Tagged(base, priority=priority, deadline=deadline, tenant=tenant)
+
+
+def find_tag(w: Divisible) -> Optional[Tagged]:
+    """First :class:`Tagged` in an adaptor stack (None if the work carries
+    no tag) — how the SLO policies read priority/deadline through any
+    wrapping, e.g. ``cap(tagged(...), k)`` or ``tagged(size_limit(...))``."""
+    while isinstance(w, Adaptor):
+        if isinstance(w, Tagged):
+            return w
+        w = w.base
+    return None
+
+
+# ---------------------------------------------------------------------------
 # join_context_policy
 # ---------------------------------------------------------------------------
 
@@ -475,4 +531,5 @@ __all__ = [
     "ForceDepth", "force_depth", "SizeLimit", "size_limit",
     "Cap", "cap", "JoinContext", "join_context",
     "ThiefSplitting", "thief_splitting",
+    "Tagged", "tagged", "find_tag",
 ]

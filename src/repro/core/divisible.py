@@ -213,6 +213,44 @@ class ZipDivisible:
         return (ZipDivisible(tuple(lefts)), ZipDivisible(tuple(rights)))
 
 
+@dataclasses.dataclass
+class WorkSet:
+    """An ordered bag of independent work items — the multi-tenant analogue
+    of a single range.  ``size`` is the total item count; ``divide_at`` cuts
+    the *list* at the part boundary nearest the requested item count, so a
+    ``by_blocks`` outer loop over a WorkSet sequences whole submissions.
+
+    The SLO policies (:class:`~repro.core.policies.PriorityPolicy`,
+    :class:`~repro.core.policies.DeadlinePolicy`) treat each part as one
+    pool entry ordered by its :class:`~repro.core.adaptors.Tagged` metadata;
+    every other policy sees an ordinary Divisible.
+    """
+
+    parts: Tuple[Divisible, ...]
+
+    def size(self) -> int:
+        return sum(p.size() for p in self.parts)
+
+    def should_be_divided(self) -> bool:
+        return len(self.parts) > 1
+
+    def divide(self) -> Tuple["WorkSet", "WorkSet"]:
+        return self.divide_at(self.size() // 2)
+
+    def divide_at(self, index: int) -> Tuple["WorkSet", "WorkSet"]:
+        index = _check_fraction(index, self.size())
+        cut, acc = 0, 0
+        for p in self.parts:       # smallest non-empty prefix >= index items
+            acc += p.size()
+            cut += 1
+            if acc >= index:
+                break
+        return (WorkSet(self.parts[:cut]), WorkSet(self.parts[cut:]))
+
+    def __repr__(self) -> str:
+        return f"WorkSet({len(self.parts)} parts, {self.size()} items)"
+
+
 # ---------------------------------------------------------------------------
 # Fannkuch-style permutation ranges (paper §4.3)
 # ---------------------------------------------------------------------------
@@ -308,5 +346,6 @@ def total_permutations(n: int) -> int:
 
 __all__ = [
     "Divisible", "Producer", "WorkRange", "BatchWork", "SeqWork",
-    "TileGrid2D", "ZipDivisible", "PermRange", "total_permutations",
+    "TileGrid2D", "ZipDivisible", "WorkSet", "PermRange",
+    "total_permutations",
 ]

@@ -102,6 +102,18 @@ class PreemptionFault:
 
 
 @dataclasses.dataclass(frozen=True)
+class SlotDeath:
+    """Decode slot ``slot`` of a :class:`~repro.serve.engine.ContinuousEngine`
+    dies at engine step ``at_step`` — its lane state (tokens emitted so far,
+    KV pages, length counters) is discarded and the in-flight request is
+    requeued at the *front* of the waiting queue, to be re-served from
+    scratch exactly once."""
+
+    at_step: int
+    slot: int
+
+
+@dataclasses.dataclass(frozen=True)
 class HostDeath:
     """Host ``host`` (a contiguous block of ``devices_per_host`` devices)
     dies at train step ``at_step`` — the in-flight step is lost, survivors
@@ -127,6 +139,7 @@ class FaultPlan:
     corruptions: Tuple[CorruptionFault, ...] = ()
     preemptions: Tuple[PreemptionFault, ...] = ()
     host_deaths: Tuple[HostDeath, ...] = ()
+    slot_deaths: Tuple[SlotDeath, ...] = ()
 
     # ---- Runtime-facing queries -------------------------------------------
     def death_time(self, worker: int) -> Optional[float]:
@@ -158,6 +171,9 @@ class FaultPlan:
                 return h
         return None
 
+    def slot_deaths_at(self, step: int) -> Tuple[SlotDeath, ...]:
+        return tuple(s for s in self.slot_deaths if s.at_step == step)
+
     # ---- constructors ------------------------------------------------------
     @classmethod
     def random(cls, seed: int, *, p: int, horizon: float,
@@ -181,5 +197,5 @@ class FaultPlan:
 
 __all__ = [
     "FaultPlan", "WorkerDeath", "Slowdown", "CheckpointWriteFault",
-    "CorruptionFault", "PreemptionFault", "HostDeath",
+    "CorruptionFault", "PreemptionFault", "HostDeath", "SlotDeath",
 ]

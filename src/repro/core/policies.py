@@ -47,11 +47,13 @@ splits exactly as it would under :class:`JoinPolicy`.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import math
 from typing import Any, Optional
 
-from .adaptors import Adaptor, StealContext
-from .divisible import Divisible
+from .adaptors import Adaptor, StealContext, find_tag
+from .divisible import Divisible, WorkSet
 from .plan import geometric_blocks
 from .runtime import CostModel, Runtime, SimResult, Task
 
@@ -313,6 +315,136 @@ class StaticPartitionPolicy(SchedulingPolicy):
 
 
 # ---------------------------------------------------------------------------
+# priority / deadline (multi-tenant SLO scheduling)
+# ---------------------------------------------------------------------------
+
+class PriorityPolicy(SchedulingPolicy):
+    """Priority-ordered task selection over a shared relaxed k-priority pool.
+
+    The pool holds whole submissions (a :class:`~repro.core.divisible.WorkSet`
+    seeds one entry per part; any other divisible seeds a single entry),
+    ordered by the :class:`~repro.core.adaptors.Tagged` metadata found in each
+    part's adaptor stack — untagged work runs at priority 0.  An idle worker
+    pops from the pool (charged one ``steal_latency``, the shared-structure
+    access cost), eagerly divides the entry exactly like :class:`JoinPolicy`
+    — right children re-enter the *pool* with the inherited tag, so high
+    priority work spreads across workers — and runs the left leaf.
+
+    ``k`` is the relaxation knob from "Data Structures for Task-based
+    Priority Scheduling": a pop draws uniformly among the top ``k`` entries
+    instead of the strict maximum, trading ordering fidelity for contention.
+    ``k=1`` is strict and consumes **no** rng, so faultless strict runs are
+    bit-identical regardless of relaxed runs interleaved on the same seed.
+
+    Composes with ``by_blocks`` (each block's WorkSet slice becomes a fresh
+    pool) and with the full adaptor stack (``cap``/``size_limit`` gate the
+    eager division through the standard ``should_divide`` path).
+    """
+
+    name = "priority"
+
+    def __init__(self, k: int = 1):
+        if k < 1:
+            raise ValueError(f"relaxation k must be >= 1, got {k}")
+        self.k = k
+
+    # -- pool ordering --------------------------------------------------------
+    def order_key(self, w: Divisible) -> tuple:
+        tag = find_tag(w)
+        return (-(tag.priority if tag is not None else 0),)
+
+    def expired(self, rt: Runtime, wid: int, w: Divisible) -> bool:
+        """Deadline hook: priority scheduling never expires work."""
+        return False
+
+    def _push(self, w: Divisible) -> None:
+        bisect.insort(self._pool, (self.order_key(w), self._seq, w))
+        self._seq += 1
+
+    def _pop_index(self, rt: Runtime) -> int:
+        if self.k == 1 or len(self._pool) == 1:
+            return 0          # strict: no rng consumed
+        return rt.rng.randrange(min(self.k, len(self._pool)))
+
+    # -- hooks ----------------------------------------------------------------
+    def on_region_start(self, rt: Runtime, work: Divisible) -> None:
+        self._pool: list = []
+        self._seq = 0
+        parts = work.parts if isinstance(work, WorkSet) else (work,)
+        for part in parts:
+            self._push(part)
+        rt.outstanding = len(self._pool)
+
+    def select_worker(self, rt: Runtime) -> Optional[int]:
+        cand = [i for i in range(rt.p)
+                if rt.current[i] is not None
+                or (rt.alive(i) and self._pool)]
+        if not cand:
+            return None
+        return min(cand, key=lambda i: rt.time[i])
+
+    def quantum(self, rt: Runtime, wid: int) -> None:
+        task = rt.current[wid]
+        if task is None:
+            while self._pool:
+                _, _, w = self._pool.pop(self._pop_index(rt))
+                rt.charge(wid, rt.cost.steal_latency)
+                if self.expired(rt, wid, w):
+                    rt.stats["expired"] += w.size()
+                    rt.outstanding -= 1
+                    if isinstance(w, Adaptor):
+                        w.on_finish()
+                    continue
+                task = Task(work=w, creator=wid)
+                break
+            if task is None:
+                return
+            rt.current[wid] = task
+        task = self.on_task_start(rt, wid, task)
+        rt.run_leaf(wid, task)
+
+    def on_task_start(self, rt: Runtime, wid: int, task: Task) -> Task:
+        """Divide until the work declines; right children re-enter the shared
+        pool with the inherited tag (division preserves the Tagged wrapper)."""
+        ctx = StealContext(stolen=task.stolen, worker=wid,
+                           demand=rt.idle_count())
+        w = task.work
+        while rt.wants_division(w, ctx):
+            rt.charge(wid, rt.cost.split_cost(w))
+            l, r = rt.divide(w, ctx)
+            self._push(r)
+            rt.outstanding += 1
+            task = Task(work=l, creator=wid, stolen=False)
+            w = task.work
+            ctx = StealContext(stolen=False, worker=wid,
+                               demand=rt.idle_count())
+        return task
+
+
+class DeadlinePolicy(PriorityPolicy):
+    """Earliest-deadline-first with expiry: the pool orders by the Tagged
+    absolute virtual-time ``deadline`` (untagged / undated work sorts last),
+    and a pop whose deadline already passed on the popping worker's clock is
+    *dropped and counted* (``SimResult.expired_items``), never run — late
+    work wastes no capacity.  Conservation invariant (faultless, no early
+    stop): ``items_processed + expired_items == items_total``.
+    """
+
+    name = "deadline"
+
+    def order_key(self, w: Divisible) -> tuple:
+        tag = find_tag(w)
+        d = (tag.deadline if tag is not None and tag.deadline is not None
+             else math.inf)
+        return (d,)
+
+    def expired(self, rt: Runtime, wid: int, w: Divisible) -> bool:
+        tag = find_tag(w)
+        return (tag is not None and tag.deadline is not None
+                and rt.time[wid] > tag.deadline)
+
+
+# ---------------------------------------------------------------------------
 # by_blocks as a *dynamic* policy: sequential outer loop, any inner policy
 # ---------------------------------------------------------------------------
 
@@ -374,5 +506,6 @@ def simulate(work: Divisible, policy: SchedulingPolicy, p: int,
 
 __all__ = [
     "SchedulingPolicy", "JoinPolicy", "DepJoinPolicy", "AdaptivePolicy",
-    "StaticPartitionPolicy", "ByBlocksPolicy", "simulate",
+    "StaticPartitionPolicy", "ByBlocksPolicy", "PriorityPolicy",
+    "DeadlinePolicy", "simulate",
 ]

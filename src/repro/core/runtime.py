@@ -101,6 +101,7 @@ class SimResult:
     deaths: int = 0              # workers killed by the fault plan
     lost_items: int = 0          # items whose fold state died with a worker
     recoveries: int = 0          # orphaned tasks adopted by survivors
+    expired_items: int = 0       # items dropped past their deadline (EDF)
 
     @property
     def lost_work_fraction(self) -> float:
@@ -188,7 +189,7 @@ class Runtime:
         self.busy = [0.0] * self.p
         self.stats: Dict[str, int] = dict(
             tasks=0, divisions=0, steal_try=0, steal_ok=0, reductions=0,
-            items=0, deaths=0, lost=0, recoveries=0)
+            items=0, deaths=0, lost=0, recoveries=0, expired=0)
         self.stop_flag = False
         self.stop_hit: Any = None
         self.items_total = work.size()
@@ -254,7 +255,8 @@ class Runtime:
             per_worker_busy=self.busy, stopped_early=self.stop_flag,
             wasted_items=wasted, deaths=self.stats["deaths"],
             lost_items=self.stats["lost"],
-            recoveries=self.stats["recoveries"])
+            recoveries=self.stats["recoveries"],
+            expired_items=self.stats["expired"])
 
     # -- time & cost charging ------------------------------------------------
 

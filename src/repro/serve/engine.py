@@ -24,8 +24,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import signal
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +39,13 @@ from .early_exit import (DecodeStats, decode_until_eos, make_decode_block,
                          make_decode_tick)
 from .kvcache import PageTable, cache_slot_insert
 from .prefill import ChunkedPrefill
+from .slo import SLO_CLASSES, FifoServePolicy, ServePolicy
+
+
+class QueueFull(RuntimeError):
+    """submit() refused: the waiting queue is at ``EngineConfig.max_queue``.
+    Loud by design — under sustained overload the caller must shed or
+    back off; silent unbounded queue growth is the failure mode."""
 
 
 @dataclasses.dataclass
@@ -78,8 +86,15 @@ class Request:
     rid: int
     prompt: np.ndarray            # (S,) int32
     max_new: int = 64
+    # SLO metadata (the serving analogue of the core Tagged adaptor)
+    slo: str = "batch"            # "interactive" | "batch" | "background"
+    priority: int = 0             # within-class: higher = more urgent
+    deadline_s: Optional[float] = None   # relative to t_submit; None = never
+    tenant: str = "default"
     result: Optional[np.ndarray] = None
     stats: Optional[DecodeStats] = None
+    shed: bool = False            # dropped past its deadline, never served
+    requeues: int = 0             # times re-served from scratch (slot death)
     # wall-clock latency markers (set by the engines)
     t_submit: Optional[float] = None
     t_first: Optional[float] = None   # first token available
@@ -101,6 +116,35 @@ class EngineConfig:
     decode_tick: int = 8
     page_size: int = 32
     num_pages: Optional[int] = None   # None → full capacity
+    # overload bounds: waiting-queue depth (None = unbounded, legacy) and
+    # per-SLO-class concurrency caps, e.g. {"batch": 2} (absent = uncapped)
+    max_queue: Optional[int] = None
+    class_caps: Optional[Dict[str, int]] = None
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.prefill_block_budget is not None \
+                and self.prefill_block_budget < 1:
+            raise ValueError("prefill_block_budget must be >= 1 when set, "
+                             f"got {self.prefill_block_budget}")
+        if self.decode_tick < 1:
+            raise ValueError(
+                f"decode_tick must be >= 1, got {self.decode_tick}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
+        if self.max_queue is not None and self.max_queue < self.max_batch:
+            raise ValueError(
+                f"max_queue ({self.max_queue}) must be >= max_batch "
+                f"({self.max_batch}): a full batch must be admittable")
+        for c, n in (self.class_caps or {}).items():
+            if c not in SLO_CLASSES:
+                raise ValueError(f"unknown SLO class {c!r} in class_caps; "
+                                 f"expected one of {SLO_CLASSES}")
+            if n < 1:
+                raise ValueError(f"class_caps[{c!r}] must be >= 1, got {n}")
 
 
 @dataclasses.dataclass
@@ -121,31 +165,53 @@ class EngineTelemetry:
     cap_divides: int = 0
     cap_finishes: int = 0
     cap_live_peak: int = 0
+    # SLO / overload accounting
+    queue_rejections: int = 0     # submit() refused at max_queue
+    shed: int = 0                 # queue entries dropped past their deadline
+    shed_by_tenant: Dict[str, int] = dataclasses.field(default_factory=dict)
+    shed_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
+    class_preemptions: int = 0    # batch prefill parked for interactive work
+    policy_swaps: int = 0         # live set_policy() calls
+    slot_deaths: int = 0          # decode lanes killed (chaos) and requeued
     ewma: float = 0.25
+    # EWMA fields already seeded by a first observation.  A plain
+    # ``old == 0.0`` sentinel misreads a genuine ~0.0 first sample and,
+    # worse, mixes every *first* observation with the zero init when the
+    # default changes — the cold-start skew the admission limit inherited.
+    _seeded: Set[str] = dataclasses.field(default_factory=set, repr=False)
 
-    def _mix(self, old: float, new: float) -> float:
-        return new if old == 0.0 else (1 - self.ewma) * old + self.ewma * new
+    def _mix(self, field: str, new: float) -> float:
+        if field not in self._seeded:
+            self._seeded.add(field)
+            return new            # first observation seeds the EWMA directly
+        old = getattr(self, field)
+        return (1 - self.ewma) * old + self.ewma * new
 
     def observe_decode(self, useful: int, seconds: float, steps: int) -> None:
         self.ticks += 1
         self.decode_steps += steps
         self.useful_decoded += useful
-        self.decode_s_per_token = self._mix(self.decode_s_per_token,
+        self.decode_s_per_token = self._mix("decode_s_per_token",
                                             seconds / max(1, useful))
 
     def observe_prefill(self, blocks: int, tokens: int,
                         seconds: float) -> None:
         if blocks:
-            self.prefill_s_per_block = self._mix(self.prefill_s_per_block,
+            self.prefill_s_per_block = self._mix("prefill_s_per_block",
                                                  seconds / blocks)
         if tokens:
-            self.prefill_s_per_token = self._mix(self.prefill_s_per_token,
+            self.prefill_s_per_token = self._mix("prefill_s_per_token",
                                                  seconds / tokens)
 
     def observe_admission(self, pages: int) -> None:
         self.admissions += 1
-        self.pages_per_request = self._mix(self.pages_per_request,
-                                           float(pages))
+        self.pages_per_request = self._mix("pages_per_request", float(pages))
+
+    def observe_shed(self, req: "Request") -> None:
+        self.shed += 1
+        self.shed_by_tenant[req.tenant] = \
+            self.shed_by_tenant.get(req.tenant, 0) + 1
+        self.shed_by_class[req.slo] = self.shed_by_class.get(req.slo, 0) + 1
 
     def on_cap_event(self, kind: str, live: int) -> None:
         if kind == "divide":
@@ -170,6 +236,11 @@ class EngineTelemetry:
             "cap_divides": self.cap_divides,
             "cap_finishes": self.cap_finishes,
             "cap_live_peak": self.cap_live_peak,
+            "queue_rejections": self.queue_rejections,
+            "shed": self.shed,
+            "class_preemptions": self.class_preemptions,
+            "policy_swaps": self.policy_swaps,
+            "slot_deaths": self.slot_deaths,
         }
 
 
@@ -198,11 +269,18 @@ class Engine:
                                         max_block=256)
         self._blockfn = make_decode_block(model, cfg.eos_id)
         self.queue: List[Request] = []
+        self.telemetry = EngineTelemetry()
         self.admission = cap(WorkRange(0, 1 << 30), cfg.max_batch)
         self.admission_sim = AdmissionSimulator(lanes=cfg.max_batch)
         self._residual: Optional[_PrefillResidual] = None
 
     def submit(self, req: Request) -> None:
+        if self.cfg.max_queue is not None \
+                and len(self.queue) >= self.cfg.max_queue:
+            self.telemetry.queue_rejections += 1
+            raise QueueFull(
+                f"request {req.rid}: queue is at max_queue="
+                f"{self.cfg.max_queue}; shed load or retry later")
         if req.t_submit is None:
             req.t_submit = time.perf_counter()
         self.queue.append(req)
@@ -306,6 +384,7 @@ class _Slot:
     req: Request
     first: int                    # first token (from prefill logits)
     lease: Cap                    # admission-cap clone; on_finish() retires
+    class_lease: Optional[Cap] = None   # per-SLO-class cap clone
     emitted: List[int] = dataclasses.field(default_factory=list)
     eos_hit: bool = False
     steps: int = 0                # decode steps run while occupied
@@ -314,7 +393,12 @@ class _Slot:
 
 @dataclasses.dataclass
 class _PrefillJob:
-    """The (single) in-flight chunked prefill, resumable across steps."""
+    """The (single) in-flight chunked prefill, resumable across steps.
+
+    ``done_logits`` holds the completed prefill's gathered logits when no
+    decode slot was free at completion (possible only after a class
+    preemption parked this job while another admission proceeded); the job
+    installs at the next step with a free lane."""
 
     req: Request
     lease: Cap
@@ -322,6 +406,8 @@ class _PrefillJob:
     cache: Any                    # batch=1 scratch cache, width max_seq
     pos: int = 0
     gathered: Optional[jnp.ndarray] = None
+    class_lease: Optional[Cap] = None
+    done_logits: Optional[jnp.ndarray] = None
 
 
 class ContinuousEngine:
@@ -333,7 +419,8 @@ class ContinuousEngine:
     (4) retires finished slots and returns their requests.
     """
 
-    def __init__(self, model: Model, params: Any, cfg: EngineConfig):
+    def __init__(self, model: Model, params: Any, cfg: EngineConfig,
+                 policy: Optional[ServePolicy] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -351,6 +438,11 @@ class ContinuousEngine:
             WorkRange(0, 1 << 30), B + 1,
             threshold_fn=self._admission_limit,
             on_event=self.telemetry.on_cap_event)
+        # Per-SLO-class concurrency caps: the same adaptor, one per class
+        # named in cfg.class_caps (absent classes stay uncapped).
+        self._class_caps: Dict[str, Cap] = {
+            c: Cap(WorkRange(0, 1 << 30), n + 1)
+            for c, n in (cfg.class_caps or {}).items()}
         self.cache = model.init_cache(B, cfg.max_seq)
         self.lengths = jnp.zeros((B,), jnp.int32)
         self.tokens = jnp.zeros((B,), jnp.int32)
@@ -358,7 +450,24 @@ class ContinuousEngine:
         self.remaining = jnp.zeros((B,), jnp.int32)
         self.slots: List[Optional[_Slot]] = [None] * B
         self._job: Optional[_PrefillJob] = None
+        self._parked: Optional[_PrefillJob] = None   # class-preempted prefill
         self._tick = make_decode_tick(model, cfg.eos_id)
+        self._policy: ServePolicy = policy or FifoServePolicy()
+        self.preempted = False    # SIGTERM drain flag
+
+    # ---------------------------------------------------------------- policy
+    @property
+    def policy(self) -> ServePolicy:
+        return self._policy
+
+    def set_policy(self, policy: ServePolicy) -> None:
+        """Hot-swap the scheduling policy on the live engine.  In-flight
+        slots and the in-flight prefill are untouched (they drain under
+        whatever ordering admitted them); only future admissions consult
+        the new policy — so per-request token streams are exactness-
+        preserved across the swap by construction."""
+        self._policy = policy
+        self.telemetry.policy_swaps += 1
 
     # ---------------------------------------------------------------- admit
     def _slot_span(self, req: Request) -> int:
@@ -374,6 +483,15 @@ class ContinuousEngine:
                 f"request {req.rid}: prompt {len(req.prompt)} + max_new "
                 f"{req.max_new} needs {span} cache positions but "
                 f"EngineConfig.max_seq is {self.cfg.max_seq}")
+        if req.slo not in SLO_CLASSES:
+            raise ValueError(f"request {req.rid}: unknown SLO class "
+                             f"{req.slo!r}; expected one of {SLO_CLASSES}")
+        if self.cfg.max_queue is not None \
+                and len(self.queue) >= self.cfg.max_queue:
+            self.telemetry.queue_rejections += 1
+            raise QueueFull(
+                f"request {req.rid}: queue is at max_queue="
+                f"{self.cfg.max_queue}; shed load or retry later")
         if req.t_submit is None:
             req.t_submit = time.perf_counter()
         self.queue.append(req)
@@ -384,34 +502,105 @@ class ContinuousEngine:
         the root the shared counter starts with."""
         active = sum(s is not None for s in self.slots)
         active += 1 if self._job is not None else 0
+        active += 1 if self._parked is not None else 0
         ppr = self.telemetry.pages_per_request
         est = (max(1, int(math.ceil(ppr))) if ppr > 0
                else max(1, self.pages.pages_needed(self.cfg.max_seq // 4)))
         headroom = len(self.pages.free) // est
         return active + headroom + 1
 
+    def _class_cap_ok(self, slo: str) -> bool:
+        c = self._class_caps.get(slo)
+        return c is None or c.should_be_divided()
+
+    def _take_class_lease(self, slo: str) -> Optional[Cap]:
+        c = self._class_caps.get(slo)
+        if c is None:
+            return None
+        lease, rest = c.divide_at(1)
+        self._class_caps[slo] = rest
+        return lease
+
+    # -------------------------------------------------------------- shedding
+    def _shed_expired(self) -> List[Request]:
+        """Drop queue entries already past their deadline — loudly.  A shed
+        request is returned from step() like a retired one (empty result,
+        ``shed=True``) so callers account for every submission exactly
+        once; per-tenant and per-class counters make the drop visible."""
+        if not self.queue:
+            return []
+        now = time.perf_counter()
+        shed: List[Request] = []
+        kept: List[Request] = []
+        for r in self.queue:
+            if r.deadline_s is not None and r.t_submit is not None \
+                    and now > r.t_submit + r.deadline_s:
+                r.shed = True
+                r.result = np.zeros((0,), np.int32)
+                r.stats = DecodeStats(all_finished=False)
+                r.t_done = now
+                self.telemetry.observe_shed(r)
+                shed.append(r)
+            else:
+                kept.append(r)
+        self.queue = kept
+        return shed
+
     def _try_admit(self) -> None:
         if self._job is not None or not self.queue:
             return
-        if not any(s is None for s in self.slots):
+        # a parked prefill needs a decode lane too: keep one in reserve
+        free_slots = sum(s is None for s in self.slots)
+        if free_slots <= (1 if self._parked is not None else 0):
             return
         if not self._admission.should_be_divided():
             return
-        req = self.queue[0]
+        req = None
+        for qi in self._policy.order(self.queue, time.perf_counter()):
+            if self._class_cap_ok(self.queue[qi].slo):
+                req = self.queue[qi]
+                break
+        if req is None:           # every waiting class is at its cap
+            return
         pages = self.pages.allocate(req.rid, self._slot_span(req))
         if pages is None:         # page exhaustion → defer admission
             self.telemetry.deferred_pages += 1
             return
-        self.queue.pop(0)
+        self.queue.remove(req)
         lease, rest = self._admission.divide_at(1)
         self._admission = rest
+        class_lease = self._take_class_lease(req.slo)
         self.telemetry.observe_admission(len(pages))
         S_pad = max(32, -(-len(req.prompt) // 32) * 32)
         toks = np.full((1, S_pad), self.cfg.pad_id, np.int32)
         toks[0, :len(req.prompt)] = req.prompt
         self._job = _PrefillJob(
             req=req, lease=lease, toks=jnp.asarray(toks),
-            cache=self.model.init_cache(1, self.cfg.max_seq))
+            cache=self.model.init_cache(1, self.cfg.max_seq),
+            class_lease=class_lease)
+
+    # ---------------------------------------------------- class preemption
+    def _maybe_park_prefill(self) -> None:
+        """Park a lower-class in-flight prefill at its by_blocks boundary
+        when interactive work is waiting and admittable.  The parked job's
+        cache and position are already consistent (the chunked prefill is
+        resumable by construction), so parking loses nothing; the job
+        resumes as soon as no interactive admission can proceed."""
+        job = self._job
+        if (not self._policy.preempt_classes or job is None
+                or self._parked is not None or job.done_logits is not None
+                or job.req.slo == "interactive"):
+            return
+        if not any(r.slo == "interactive" for r in self.queue):
+            return
+        free_slots = sum(s is None for s in self.slots)
+        if free_slots < 2:        # one lane for the parked job, one for the
+            return                # interactive admission — else don't park
+        if not self._admission.should_be_divided() \
+                or not self._class_cap_ok("interactive"):
+            return
+        self._parked, self._job = job, None
+        self.telemetry.class_preemptions += 1
 
     # -------------------------------------------------------------- prefill
     def _prefill_budget(self) -> Optional[int]:
@@ -430,6 +619,9 @@ class ContinuousEngine:
         job = self._job
         if job is None:
             return
+        if job.done_logits is not None:   # completed earlier, lane-starved
+            self._install_job(job, job.done_logits)
+            return
         t0 = time.perf_counter()
         logits, cache, pstats = self.prefiller.run(
             self.params, job.toks, job.cache, start=job.pos,
@@ -442,10 +634,19 @@ class ContinuousEngine:
                 logits
             self.telemetry.prefill_preemptions += 1
             return
-        # complete: install into the first free slot
-        slot = next(i for i, s in enumerate(self.slots) if s is None)
+        job.cache = cache
+        self._install_job(job, logits)
+
+    def _install_job(self, job: _PrefillJob, logits: jnp.ndarray) -> None:
+        """Install a completed prefill into a free decode lane (or stash
+        its logits until one frees up)."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            job.done_logits = logits
+            return
+        slot = free[0]
         req = job.req
-        self.cache = cache_slot_insert(self.cache, cache, slot)
+        self.cache = cache_slot_insert(self.cache, job.cache, slot)
         first = int(np.asarray(
             jnp.argmax(logits[0, :self.model.cfg.vocab_size])))
         req.t_first = time.perf_counter()
@@ -456,6 +657,7 @@ class ContinuousEngine:
         self.finished = self.finished.at[slot].set(done)
         self.remaining = self.remaining.at[slot].set(req.max_new - 1)
         self.slots[slot] = _Slot(req=req, first=first, lease=job.lease,
+                                 class_lease=job.class_lease,
                                  eos_hit=(first == self.cfg.eos_id))
         self._job = None
 
@@ -506,23 +708,80 @@ class ContinuousEngine:
             r.t_done = now
             self.pages.release(r.rid)
             s.lease.on_finish()
+            if s.class_lease is not None:
+                s.class_lease.on_finish()
             self.slots[i] = None
             self.telemetry.retired += 1
             done.append(r)
         return done
 
+    # ----------------------------------------------------------------- chaos
+    def kill_slot(self, i: int) -> bool:
+        """Chaos hook: decode lane ``i`` dies mid-decode.  Its emitted
+        tokens, pages and leases are discarded and the request is requeued
+        at the *front* of the waiting queue to be re-served from scratch —
+        greedy decode is deterministic, so the re-serve emits the exact
+        tokens the undisturbed run would have.  Returns False for an
+        empty or out-of-range lane (fault plans are written against step
+        indices, not live lane assignments)."""
+        s = self.slots[i] if 0 <= i < len(self.slots) else None
+        if s is None:
+            return False
+        r = s.req
+        self.pages.release(r.rid)
+        s.lease.on_finish()
+        if s.class_lease is not None:
+            s.class_lease.on_finish()
+        self.slots[i] = None
+        self.finished = self.finished.at[i].set(True)
+        self.remaining = self.remaining.at[i].set(0)
+        self.lengths = self.lengths.at[i].set(0)
+        r.requeues += 1
+        r.t_first = None
+        self.queue.insert(0, r)
+        self.telemetry.slot_deaths += 1
+        return True
+
+    # -------------------------------------------------------------- preempt
+    def install_signal_handlers(self, signals=(signal.SIGTERM,)) -> Dict:
+        """Route SIGTERM to a graceful drain: the flag flips at the next
+        step() boundary — in-flight slots and the in-flight prefill run to
+        completion, the waiting queue is frozen for :meth:`handoff`.
+        Returns the previous handlers so tests can restore them."""
+        return {s: signal.signal(s, self._on_signal) for s in signals}
+
+    def _on_signal(self, signum, frame) -> None:
+        self.preempted = True
+
+    def handoff(self) -> List[Request]:
+        """Detach the waiting queue (for resubmission on a fresh engine
+        after a drain).  Queued requests were never prefix-cached, so
+        resubmission is exact by construction."""
+        q, self.queue = self.queue, []
+        return q
+
     # ----------------------------------------------------------------- loop
     @property
     def pending(self) -> bool:
-        return (bool(self.queue) or self._job is not None
-                or any(s is not None for s in self.slots))
+        in_flight = (self._job is not None or self._parked is not None
+                     or any(s is not None for s in self.slots))
+        if self.preempted:
+            return in_flight      # drain mode: the queue waits for handoff
+        return bool(self.queue) or in_flight
 
     def step(self) -> List[Request]:
-        self._try_admit()
+        shed: List[Request] = []
+        if not self.preempted:
+            shed = self._shed_expired()
+            self._maybe_park_prefill()
+            self._try_admit()
+        if self._job is None and self._parked is not None:
+            # nothing (more) to admit ahead of it: resume the parked prefill
+            self._job, self._parked = self._parked, None
         self._run_prefill()
         self._decode_tick()
-        return self._retire()
+        return self._retire() + shed
 
 
 __all__ = ["Engine", "ContinuousEngine", "EngineConfig", "EngineTelemetry",
-           "Request", "AdmissionSimulator"]
+           "Request", "AdmissionSimulator", "QueueFull"]

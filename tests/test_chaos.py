@@ -331,6 +331,112 @@ def test_engine_residual_has_priority_over_admissions():
 
 
 # ---------------------------------------------------------------------------
+# serve: SIGTERM drain + handoff, and a slot-death storm under replay
+# ---------------------------------------------------------------------------
+
+def _continuous(model, params, **kw):
+    from repro.serve.engine import ContinuousEngine, EngineConfig
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("eos_id", 7)
+    kw.setdefault("max_seq", 224)
+    return ContinuousEngine(model, params, EngineConfig(**kw))
+
+
+def _slo_reqs(vocab, n=4):
+    from repro.serve.engine import Request
+    rng = np.random.RandomState(7)
+    return [Request(rid=i,
+                    prompt=rng.randint(8, vocab, size=24 + 9 * i)
+                    .astype(np.int32), max_new=10)
+            for i in range(n)]
+
+
+def test_sigterm_drains_continuous_engine_handoff_resumes_exactly():
+    """Real SIGTERM mid-serve: the flag flips at the step boundary,
+    in-flight slots drain to completion, the waiting queue survives for
+    handoff, and resubmission on a fresh engine yields the exact tokens of
+    an undisturbed run — zero requests lost, zero duplicated."""
+    import os
+    cfg = _fp32(get_smoke_config("llama3-8b"))
+    model = Model(cfg)
+    params = model.init(KEY)
+    vocab = cfg.vocab_size
+
+    refs = {}
+    ref_eng = _continuous(model, params)
+    for r in _slo_reqs(vocab):
+        ref_eng.submit(r)
+    for _ in range(200):
+        if not ref_eng.pending:
+            break
+        for r in ref_eng.step():
+            refs[r.rid] = np.asarray(r.result)
+    assert sorted(refs) == [0, 1, 2, 3]
+
+    eng = _continuous(model, params, prefill_block_budget=1)
+    old = signal.getsignal(signal.SIGTERM)
+    done = []
+    try:
+        eng.install_signal_handlers()
+        for r in _slo_reqs(vocab):
+            eng.submit(r)
+        done.extend(eng.step())           # some work in flight
+        os.kill(os.getpid(), signal.SIGTERM)
+        for _ in range(200):              # drain mode: no new admissions
+            if not eng.pending:
+                break
+            done.extend(eng.step())
+    finally:
+        signal.signal(signal.SIGTERM, old)
+    assert eng.preempted
+    waiting = eng.handoff()
+    assert waiting and eng.queue == []    # queue froze, then detached
+    assert not any(s is not None for s in eng.slots)   # slots fully drained
+    assert eng._job is None and eng._parked is None
+
+    resumed = _continuous(model, params)
+    for r in waiting:
+        resumed.submit(r)
+    for _ in range(200):
+        if not resumed.pending:
+            break
+        done.extend(resumed.step())
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]   # conservation
+    for r in done:
+        np.testing.assert_array_equal(refs[r.rid], np.asarray(r.result))
+
+
+def test_slot_death_storm_replay_conserves_and_reserves_exactly():
+    """Planned decode-lane deaths during a wall-clock replay: every killed
+    request is requeued exactly once per death, re-served from scratch,
+    and its final tokens match the undisturbed run."""
+    from repro.chaos.serving import (ReplayResult, SlotDeathInjector,
+                                     TraceItem, make_request, replay)
+    from repro.core import SlotDeath
+    cfg = _fp32(get_smoke_config("llama3-8b"))
+    model = Model(cfg)
+    params = model.init(KEY)
+    vocab = cfg.vocab_size
+    trace = tuple(TraceItem(rid=i, arrival=0.0, prompt_len=16 + 7 * i,
+                            max_new=12) for i in range(4))
+
+    calm = replay(_continuous(model, params), trace, vocab=vocab)
+    assert isinstance(calm, ReplayResult) and calm.conserved(trace)
+    refs = {r.rid: np.asarray(r.result) for r in calm.served}
+
+    inj = SlotDeathInjector(FaultPlan(slot_deaths=(
+        SlotDeath(at_step=2, slot=0), SlotDeath(at_step=4, slot=1),
+        SlotDeath(at_step=6, slot=9))))     # slot 9 doesn't exist: ignored
+    eng = _continuous(model, params)
+    stormy = replay(eng, trace, vocab=vocab, on_step=inj)
+    assert stormy.conserved(trace) and not stormy.shed
+    assert eng.telemetry.slot_deaths == len(inj.killed)
+    assert sum(r.requeues for r in stormy.served) == len(inj.killed)
+    for r in stormy.served:
+        np.testing.assert_array_equal(refs[r.rid], np.asarray(r.result))
+
+
+# ---------------------------------------------------------------------------
 # mesh8 tier: kill a host mid-step and survive it
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,189 @@
+"""SLO scheduling policies: PriorityPolicy / DeadlinePolicy over the unified
+Runtime, Tagged metadata propagation, WorkSet division, and the composition
+claims (by_blocks outer loop, cap-gated eager division).  Golden tuples pin
+the faultless strict (k=1) runs bit-exactly — strict pops consume no rng, so
+these must never drift."""
+
+import pytest
+
+from repro.core import (ByBlocksPolicy, CostModel, DeadlinePolicy,
+                        PriorityPolicy, WorkRange, WorkSet, cap, find_tag,
+                        simulate, tagged)
+
+C1 = CostModel(per_item=1.0)
+
+
+def _priority_work():
+    return WorkSet(tuple(
+        tagged(WorkRange(1000 * i, 1000 * (i + 1)), priority=i % 3,
+               tenant=f"t{i % 2}")
+        for i in range(8)))
+
+
+def _deadline_work(mult=320.0):
+    return WorkSet(tuple(
+        tagged(WorkRange(500 * i, 500 * (i + 1)), deadline=mult * (i + 1))
+        for i in range(6)))
+
+
+# ---------------------------------------------------------------------------
+# Tagged / WorkSet plumbing
+# ---------------------------------------------------------------------------
+
+def test_tagged_children_inherit_and_find_tag_through_cap():
+    w = cap(tagged(WorkRange(0, 100), priority=3, deadline=9.0,
+                   tenant="t-a"), 2)
+    tag = find_tag(w)
+    assert (tag.priority, tag.deadline, tag.tenant) == (3, 9.0, "t-a")
+    l, r = w.divide()
+    for child in (l, r):
+        t = find_tag(child)
+        assert (t.priority, t.deadline, t.tenant) == (3, 9.0, "t-a")
+    assert l.size() + r.size() == 100
+
+
+def test_workset_divide_at_cuts_whole_parts():
+    ws = WorkSet((WorkRange(0, 10), WorkRange(10, 30), WorkRange(30, 60)))
+    assert ws.size() == 60 and ws.should_be_divided()
+    l, r = ws.divide_at(15)          # smallest non-empty prefix >= 15 items
+    assert [p.size() for p in l.parts] == [10, 20]
+    assert [p.size() for p in r.parts] == [30]
+    # a full-size cut must keep every part (empty right half, nothing lost)
+    l, r = ws.divide_at(60)
+    assert l.size() == 60 and r.size() == 0 and r.parts == ()
+
+
+def test_workset_single_part_declines_division():
+    assert not WorkSet((WorkRange(0, 5),)).should_be_divided()
+
+
+# ---------------------------------------------------------------------------
+# PriorityPolicy: strict golden, ordering, relaxation
+# ---------------------------------------------------------------------------
+
+# (makespan, tasks, divisions, items, expired) at seed 0 — strict k=1
+GOLDEN_PRIORITY_P4 = (4998.5, 8000, 7992, 8000, 0)
+GOLDEN_CAP_PRIORITY = (1009.5, 24, 4000)
+GOLDEN_DEADLINE_P2 = (1992.0, 1050, 1950)
+
+
+def test_priority_strict_golden_bit_identical():
+    r = simulate(_priority_work(), PriorityPolicy(), 4, C1, seed=0)
+    assert (r.makespan, r.tasks_created, r.divisions, r.items_processed,
+            r.expired_items) == GOLDEN_PRIORITY_P4
+
+
+def test_priority_strict_seed_independent():
+    """k=1 pops consume no rng, so the strict schedule cannot depend on
+    the seed."""
+    a = simulate(_priority_work(), PriorityPolicy(), 4, C1, seed=0)
+    b = simulate(_priority_work(), PriorityPolicy(), 4, C1, seed=1234)
+    assert (a.makespan, a.tasks_created, a.divisions) == \
+        (b.makespan, b.tasks_created, b.divisions)
+
+
+def test_priority_pops_highest_first():
+    class Recording(PriorityPolicy):
+        def __init__(self):
+            super().__init__(k=1)
+            self.keys = []
+
+        def _pop_index(self, rt):
+            i = super()._pop_index(rt)
+            self.keys.append(self._pool[i][0])
+            return i
+
+    pol = Recording()
+    simulate(WorkSet(tuple(
+        tagged(WorkRange(10 * i, 10 * (i + 1)), priority=p)
+        for i, p in enumerate((0, 2, 1, 2, 0)))), pol, 1, C1, seed=0)
+    assert pol.keys == sorted(pol.keys)       # key is (-priority,): 2,2,1,0,0
+    assert pol.keys[0] == (-2,) and pol.keys[-1] == (0,)
+
+
+def test_priority_relaxed_k_deterministic_per_seed():
+    runs = [simulate(_priority_work(), PriorityPolicy(k=3), 4, C1, seed=s)
+            for s in (7, 7, 8)]
+    assert (runs[0].makespan, runs[0].tasks_created) == \
+        (runs[1].makespan, runs[1].tasks_created)
+    for r in runs:
+        assert r.items_processed == 8000      # relaxation never loses work
+
+
+def test_priority_k_validated():
+    with pytest.raises(ValueError, match="relaxation k"):
+        PriorityPolicy(k=0)
+
+
+def test_untagged_work_runs_at_default_priority():
+    r = simulate(WorkRange(0, 2000), PriorityPolicy(), 2, C1, seed=0)
+    assert r.items_processed == 2000 and r.expired_items == 0
+
+
+# ---------------------------------------------------------------------------
+# DeadlinePolicy: EDF order, expiry accounting, conservation
+# ---------------------------------------------------------------------------
+
+def test_deadline_golden_and_conservation():
+    r = simulate(_deadline_work(), DeadlinePolicy(), 2, C1, seed=0)
+    assert (r.makespan, r.items_processed, r.expired_items) == \
+        GOLDEN_DEADLINE_P2
+    assert r.items_processed + r.expired_items == 3000
+
+
+def test_deadline_pops_earliest_first():
+    class Recording(DeadlinePolicy):
+        def __init__(self):
+            super().__init__(k=1)
+            self.keys = []
+
+        def _pop_index(self, rt):
+            i = super()._pop_index(rt)
+            self.keys.append(self._pool[i][0])
+            return i
+
+    pol = Recording()
+    simulate(WorkSet(tuple(
+        tagged(WorkRange(10 * i, 10 * (i + 1)), deadline=d)
+        for i, d in enumerate((900.0, 100.0, 500.0)))), pol, 1, C1, seed=0)
+    assert pol.keys == sorted(pol.keys)       # key is (deadline,)
+    assert pol.keys[0] == (100.0,)
+
+
+def test_deadline_generous_deadlines_expire_nothing():
+    r = simulate(_deadline_work(mult=1e9), DeadlinePolicy(), 2, C1, seed=0)
+    assert r.expired_items == 0 and r.items_processed == 3000
+
+
+def test_deadline_expired_work_is_dropped_not_run():
+    """All-expired input: every item is counted, none processed, and the
+    makespan stays far below the per_item cost of actually running them."""
+    work = WorkSet(tuple(
+        tagged(WorkRange(1000 * i, 1000 * (i + 1)), deadline=-1.0)
+        for i in range(4)))
+    r = simulate(work, DeadlinePolicy(), 2, C1, seed=0)
+    assert r.items_processed == 0 and r.expired_items == 4000
+    assert r.makespan < 4000 * C1.per_item
+
+
+# ---------------------------------------------------------------------------
+# Composition: by_blocks outer loop and cap-gated division
+# ---------------------------------------------------------------------------
+
+def test_by_blocks_deadline_composition_conserves_items():
+    work = WorkSet(tuple(
+        tagged(WorkRange(100 * i, 100 * (i + 1)), deadline=10_000.0)
+        for i in range(8)))
+    pol = ByBlocksPolicy(DeadlinePolicy(), first=64)
+    r = simulate(work, pol, 4, C1, seed=0)
+    assert r.items_processed + r.expired_items == 800
+    assert r.expired_items == 0
+    assert pol.blocks_run >= 3                # geometric outer loop really ran
+
+
+def test_cap_gates_priority_eager_division():
+    r = simulate(cap(tagged(WorkRange(0, 4000), priority=1), 3),
+                 PriorityPolicy(), 4, C1, seed=0)
+    assert (r.makespan, r.tasks_created, r.items_processed) == \
+        GOLDEN_CAP_PRIORITY
+    assert r.tasks_created < 4000             # cap stopped singleton blowup
