@@ -23,7 +23,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (all_scan, fannkuch, find_first, moe_dispatch, recovery,
-                   roofline, serve_load, slo_load, sort_adaptors,
+                   roofline, scan_ssm, serve_load, slo_load, sort_adaptors,
                    sort_compare, task_counts)
     from .common import header, reset, write_json
 
@@ -40,6 +40,7 @@ def main() -> None:
         "recovery": (recovery, "recovery"),              # fault recovery cost
         "serve_load": (serve_load, "serve"),             # continuous batching
         "slo_load": (slo_load, "slo"),                   # SLO degradation
+        "scan_ssm": (scan_ssm, "scan_ssm"),              # chunked SSM scan
     }
     header()
     failed = []

@@ -240,4 +240,50 @@ print(f"SLO overload: served {len(ok)}, shed {len(shed)} "
       f"interactive always served, every rid accounted once")
 assert sorted(r.rid for r in ok + shed) == list(range(len(burst)))
 assert all(r.slo != "interactive" for r in shed)
+
+# --- 9. SSM decode serving: chunked scans + entropy-gated early exit --------
+# Recurrent models (mamba/mlstm/slstm) decode from O(1) state instead of a
+# growing KV cache.  scan_impl="pallas" runs each layer's prefill
+# recurrence as ONE chunked associative-scan launch (kernels/ssm_scan.py —
+# same VMEM-carry machinery as the sort's histogram scan); tokens are
+# unchanged vs the lax path.  The engine then (a) reserves a fixed
+# page_size span per request — recurrent_only models never defer admission
+# on sequence length — and (b) can retire *confident* lanes early: a lane
+# whose predictive entropy stays under exit_entropy nats for exit_patience
+# steps stops decoding, and its slot backfills from the queue.  Gating
+# only stops emission, so a gated stream is an exact prefix of the
+# ungated one (pinned in tests/test_ssm_scan.py and BENCH_scan_ssm.json).
+import dataclasses as _dc
+
+ssm_cfg = _dc.replace(get_smoke_config("xlstm-1.3b"),
+                      param_dtype="float32", compute_dtype="float32")
+ssm_model = Model(ssm_cfg, scan_impl="pallas")
+assert ssm_model.recurrent_only
+ssm_params = ssm_model.init(jax.random.PRNGKey(2))
+prompts = [rng.randint(3, ssm_cfg.vocab_size, size=n).astype(np.int32)
+           for n in (9, 21, 14)]
+
+def serve_ssm(exit_entropy):
+    eng = ContinuousEngine(ssm_model, ssm_params, EngineConfig(
+        max_batch=2, max_seq=96, eos_id=7, decode_tick=4, page_size=16,
+        exit_entropy=exit_entropy))
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new=12))
+    out = {}
+    while eng.pending:
+        for r in eng.step():
+            out[r.rid] = np.asarray(r.result)
+    return out, eng
+
+plain, plain_eng = serve_ssm(None)
+# a random-weight smoke model is near-maximally uncertain (entropy ≈
+# ln(vocab) nats), so the demo threshold sits just above that; a trained
+# model would use a tight budget like 2–3 nats
+gated, gated_eng = serve_ssm(float(np.log(ssm_cfg.vocab_size)) + 0.5)
+for rid in plain:                        # exact-prefix property, live
+    assert np.array_equal(gated[rid], plain[rid][:len(gated[rid])])
+print(f"ssm decode: {plain_eng.telemetry.decode_steps} plain vs "
+      f"{gated_eng.telemetry.decode_steps} gated decode steps, "
+      f"{gated_eng.telemetry.early_exits} early exits, "
+      f"gated streams are exact prefixes")
 print("QUICKSTART OK")

@@ -1,0 +1,188 @@
+"""Chunked associative scans for the SSM recurrences (ROADMAP item 4).
+
+A linear recurrence ``h_t = a_t · h_{t-1} + b_t`` is the composition of
+affine maps, and affine maps form a monoid::
+
+    (a1, b1) ∘ (a2, b2) = (a1·a2,  b2 + a2·b1)      unit (1, 0)
+
+so the whole recurrence is ONE associative scan — the paper's
+"sequence of parallel operations" shape.  On a launch-per-node tree that
+scan costs ``log n`` launches; here it reuses the ``tile_scan`` carry
+pattern (tile-local ``lax.associative_scan`` + a cross-tile carry pytree in
+VMEM scratch, the same machinery ``histogram_offsets`` uses), so the launch
+count is 1 regardless of sequence length.  Equivalence guarantee: for any
+monoid the output equals ``jax.lax.associative_scan(combine, xs)`` seeded
+with ``carry0`` — pinned by tests/test_ssm_scan.py and the
+``BENCH_scan_ssm.json`` equivalence rows.
+
+Two monoids ship here (see src/repro/models/DESIGN.md for derivations):
+
+* ``affine_combine`` — Mamba's selective scan.  Elements are the
+  discretized pairs ``(dA_t, dBx_t)``; seeding the carry with
+  ``(1, h0)`` makes the scanned second component *be* the hidden states.
+  Strictly elementwise, so ``batched_scan`` tiles the (Di·N) feature axis.
+* ``logspace_affine_combine`` — the mLSTM chunk carry.  Elements
+  ``(la, m, Ĉ, n̂)`` represent the stabilized affine map
+  ``X ↦ exp(la)·X + exp(m)·(Ĉ, n̂)`` on the matrix memory; the combine
+  max-rebases ``m`` so nothing ever overflows (unit uses ``LOG_ZERO``,
+  not −inf: ``-inf − -inf = nan`` inside ``exp`` would poison the unit).
+  Matrix leaves with different shapes → ``tree_scan`` (whole-feature
+  blocks, only the chunk axis is tiled).
+
+The public wrappers are jit-cached on shape so the serving hot loop never
+retraces; ``*_ref`` twins (pure ``lax.scan`` / ``lax.associative_scan``)
+are the benchmark baselines and the test oracles.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .tile_scan import batched_scan, tree_scan
+
+LOG_ZERO = -1e30   # the repo-wide "log of zero" that survives exp/arith
+
+
+# ---------------------------------------------------------------------------
+# monoids
+# ---------------------------------------------------------------------------
+
+def affine_combine(a: Tuple[jnp.ndarray, jnp.ndarray],
+                   b: Tuple[jnp.ndarray, jnp.ndarray]):
+    """(gain, offset) pair monoid of ``h ↦ gain·h + offset`` maps."""
+    a1, b1 = a
+    a2, b2 = b
+    return (a1 * a2, b2 + a2 * b1)
+
+
+AFFINE_UNITS = (1.0, 0.0)
+
+
+def logspace_affine_combine(a, b):
+    """Stabilized log-space affine monoid for the mLSTM matrix memory.
+
+    Elements ``(la, m, C, n)`` denote ``X ↦ exp(la)·X + exp(m)·(C, n)``
+    with ``(C, n)`` stored at scale ``exp(m)`` — i.e. the true update is
+    ``exp(m)·C``.  The combine rebases both terms onto
+    ``m' = max(m1 + la2, m2)``, so every exponent is ≤ 0: no overflow for
+    any gate magnitudes.  ``la`` never enters an exp by itself.
+    """
+    la1, m1, C1, n1 = a
+    la2, m2, C2, n2 = b
+    m = jnp.maximum(m1 + la2, m2)
+    s1 = jnp.exp(m1 + la2 - m)
+    s2 = jnp.exp(m2 - m)
+    C = s1[..., None, None] * C1 + s2[..., None, None] * C2
+    n = s1[..., None] * n1 + s2[..., None] * n2
+    return (la1 + la2, m, C, n)
+
+
+LOGSPACE_UNITS = (0.0, LOG_ZERO, 0.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# jit-cached fixed-shape entry points
+# ---------------------------------------------------------------------------
+
+_JITS: Dict[Any, Callable] = {}
+
+
+def _cached(key, build) -> Callable:
+    fn = _JITS.get(key)
+    if fn is None:
+        fn = _JITS[key] = jax.jit(build())
+    return fn
+
+
+def mamba_assoc_scan(dA: jnp.ndarray, dBx: jnp.ndarray, h0: jnp.ndarray, *,
+                     block: int = 64, fblock: int = 2048,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Chunked selective scan: ``h_t = dA_t · h_{t-1} + dBx_t`` over axis 1.
+
+    dA, dBx: (B, c, Di, N) fp32;  h0: (B, Di, N) → states (B, c, Di, N),
+    ONE pallas launch for any ``c``.
+    """
+    key = ("mamba", dA.shape, str(dA.dtype), block, fblock, interpret)
+
+    def build():
+        def run(dA, dBx, h0):
+            _, states = batched_scan(
+                (dA, dBx), combine=affine_combine, units=AFFINE_UNITS,
+                carry0=(jnp.ones_like(h0), h0), inclusive=True,
+                block=block, fblock=fblock, interpret=interpret,
+                kind="ssm_scan")
+            return states
+        return run
+
+    return _cached(key, build)(dA, dBx, h0)
+
+
+def mamba_assoc_scan_ref(dA: jnp.ndarray, dBx: jnp.ndarray,
+                         h0: jnp.ndarray) -> jnp.ndarray:
+    """lax.associative_scan oracle (the pre-Pallas model path)."""
+    prefA, within = jax.lax.associative_scan(affine_combine, (dA, dBx),
+                                             axis=1)
+    return within + prefA * h0[:, None]
+
+
+def mamba_seq_scan_ref(dA: jnp.ndarray, dBx: jnp.ndarray,
+                       h0: jnp.ndarray) -> jnp.ndarray:
+    """Honest per-step lax.scan — the launch-per-step benchmark baseline."""
+    def body(h, ab):
+        a, b = ab
+        h2 = a * h + b
+        return h2, h2
+
+    _, states = jax.lax.scan(
+        body, h0, (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3)))
+    return states.transpose(1, 0, 2, 3)
+
+
+def mlstm_carry_scan(la: jnp.ndarray, mS: jnp.ndarray, Chat: jnp.ndarray,
+                     nhat: jnp.ndarray, carry0, *, block: int = 32,
+                     interpret: bool = True):
+    """Exclusive monoid scan over the chunk axis → state ENTERING each chunk.
+
+    la, mS: (nc, B, H);  Chat: (nc, B, H, dh, dh);  nhat: (nc, B, H, dh) —
+    per-chunk summaries.  ``carry0 = (m0, C0, n0)`` is the state entering
+    chunk 0.  Returns (la_ent, m_ent, C_ent, n_ent) with
+    ``ent[k] = carry0 ∘ e_0 ∘ … ∘ e_{k-1}`` — one pallas launch.
+    """
+    m0, C0, n0 = carry0
+    key = ("mlstm", la.shape, Chat.shape, str(la.dtype), block, interpret)
+
+    def build():
+        def run(la, mS, Chat, nhat, m0, C0, n0):
+            return tree_scan(
+                (la, mS, Chat, nhat), combine=logspace_affine_combine,
+                units=LOGSPACE_UNITS,
+                carry0=(jnp.zeros_like(m0), m0, C0, n0),
+                inclusive=False, block=block, interpret=interpret,
+                kind="ssm_scan")
+        return run
+
+    return _cached(key, build)(la, mS, Chat, nhat, m0, C0, n0)
+
+
+def mlstm_carry_scan_ref(la, mS, Chat, nhat, carry0):
+    """Sequential-fold oracle for the exclusive carry scan."""
+    m0, C0, n0 = carry0
+    c = (jnp.zeros_like(m0), m0, C0, n0)
+
+    def body(c, e):
+        return logspace_affine_combine(c, e), c
+
+    _, ent = jax.lax.scan(body, c, (la, mS, Chat, nhat))
+    return ent
+
+
+__all__ = [
+    "LOG_ZERO", "affine_combine", "AFFINE_UNITS",
+    "logspace_affine_combine", "LOGSPACE_UNITS",
+    "mamba_assoc_scan", "mamba_assoc_scan_ref", "mamba_seq_scan_ref",
+    "mlstm_carry_scan", "mlstm_carry_scan_ref",
+]

@@ -20,7 +20,8 @@ carry must have the same dtype/shape as one element.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+import math
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -108,4 +109,210 @@ def histogram_offsets(hist: jnp.ndarray, *, block: int = 256,
     return scanned.reshape(r, nt).T
 
 
-__all__ = ["tile_scan", "histogram_offsets"]
+# ---------------------------------------------------------------------------
+# generalized monoid scans: pytree elements, matrix/elementwise combines
+# ---------------------------------------------------------------------------
+#
+# ``tile_scan`` handles scalar monoids (one 1-D array, scalar carry).  The
+# SSM recurrences need more: Mamba's selective scan folds *pairs*
+# ``(dA, dBx)`` under an affine combine, and the mLSTM carry is a 4-tuple
+# ``(log_decay, max_state, C, n)`` whose combine rescales matrix leaves.
+# Both are still monoids, so the single-launch carry pattern is unchanged —
+# only the carry is now a pytree of VMEM scratch buffers, one per leaf,
+# and the block-local scan is ``lax.associative_scan`` over the pytree.
+#
+# Two layouts share one kernel:
+# * ``tree_scan``      — leaves (L, *feat_i), feat shapes may differ per
+#   leaf (matrix monoids).  Blocks span the full feature extent; only the
+#   scan axis is tiled, so ``combine`` sees leaves shaped (block, *feat_i).
+# * ``batched_scan``   — leaves (B, L, *feat), identical shapes, combine
+#   strictly elementwise.  Features are flattened and tiled by ``fblock``
+#   (columns are independent under an elementwise combine), grid
+#   (B, nf, nb) with nb fastest, carry reset at each block-row start.
+
+
+def _tree_scan_kernel(*refs, nleaves, treedef, feat_shapes, combine, units,
+                      inclusive, block):
+    """One (grid-step) block of the pytree scan.  ``refs`` is
+    ``x_refs + carry0_refs + out_refs + carry_scratch_refs`` in leaf order;
+    the scratch pytree persists across the sequential grid and holds the
+    fold of every earlier block along the scan axis."""
+    n = nleaves
+    x_refs, c0_refs = refs[:n], refs[n:2 * n]
+    o_refs, carry_refs = refs[2 * n:3 * n], refs[3 * n:]
+    b = pl.program_id(2)
+
+    @pl.when(b == 0)
+    def _():
+        # entering a fresh (batch, feature-tile) row: seed from carry0
+        for cr, c0 in zip(carry_refs, c0_refs):
+            cr[...] = c0[0]
+
+    def load_x(ref, fs):
+        v = ref[0]                                  # (block, fbl)
+        return v.reshape((block,) + fs) if fs is not None else v
+
+    xs = treedef.unflatten(
+        [load_x(r, fs) for r, fs in zip(x_refs, feat_shapes)])
+    incl = jax.lax.associative_scan(combine, xs, axis=0)
+
+    carry = treedef.unflatten(
+        [cr[...].reshape(fs) if fs is not None else cr[0]
+         for cr, fs in zip(carry_refs, feat_shapes)])
+    carry_b = jax.tree.map(
+        lambda c: jnp.broadcast_to(c[None], (block,) + c.shape), carry)
+
+    if inclusive:
+        local = incl
+    else:
+        # exclusive = inclusive shifted right with the identity in front
+        local = jax.tree.map(
+            lambda t, u: jnp.concatenate(
+                [jnp.full_like(t[:1], u), t[:-1]], axis=0), incl, units)
+    out = combine(carry_b, local)
+    for o_ref, leaf in zip(o_refs, jax.tree.leaves(out)):
+        o_ref[0] = leaf.reshape(block, -1)
+
+    new_carry = combine(carry, jax.tree.map(lambda t: t[-1], incl))
+    for cr, leaf in zip(carry_refs, jax.tree.leaves(new_carry)):
+        cr[...] = leaf.reshape(1, -1)
+
+
+def _tree_scan_call(leaves, c0_leaves, fbls, feat_shapes, treedef, combine,
+                    units, inclusive, block, interpret, kind):
+    """Shared pallas_call: leaves are (G, L_pad, F_pad_i) with
+    F_pad_i = nf * fbls[i] for a common nf; carry0 leaves (G, 1, F_pad_i)."""
+    G, L_pad, _ = leaves[0].shape
+    nb = L_pad // block
+    nf = leaves[0].shape[2] // fbls[0]
+    grid = (G, nf, nb)
+    record(kind, grid, [(1, block, f) for f in fbls])
+    kernel = functools.partial(
+        _tree_scan_kernel, nleaves=len(leaves), treedef=treedef,
+        feat_shapes=feat_shapes, combine=combine, units=units,
+        inclusive=inclusive, block=block)
+    in_specs = (
+        [pl.BlockSpec((1, block, f), lambda g, fi, b: (g, b, fi))
+         for f in fbls]
+        + [pl.BlockSpec((1, 1, f), lambda g, fi, b: (g, 0, fi))
+           for f in fbls])
+    out_specs = [pl.BlockSpec((1, block, f), lambda g, fi, b: (g, b, fi))
+                 for f in fbls]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves],
+        scratch_shapes=[pltpu.VMEM((1, f), l.dtype)
+                        for f, l in zip(fbls, leaves)],
+        interpret=interpret,
+    )(*leaves, *c0_leaves)
+
+
+def _check_units(units, treedef) -> list:
+    u_leaves, u_def = jax.tree.flatten(units)
+    if u_def != treedef:
+        raise ValueError(f"units structure {u_def} != elements {treedef}")
+    return u_leaves
+
+
+def tree_scan(xs: Any, *, combine: Callable[[Any, Any], Any], units: Any,
+              carry0: Optional[Any] = None, inclusive: bool = True,
+              block: int = 128, interpret: bool = True,
+              kind: str = "tree_scan") -> Any:
+    """Associative scan over axis 0 of a pytree of (L, *feat_i) arrays in
+    ONE launch.  Matrix monoids welcome: ``combine`` sees leaves shaped
+    (block, *feat_i) and may rescale/contract trailing dims freely.
+
+    ``units`` is a pytree of scalars (the identity element); ``carry0``
+    optionally seeds the scan with a pytree of (*feat_i) leaves, so the
+    inclusive output is ``carry0 ∘ e_0 ∘ … ∘ e_t`` and the exclusive output
+    at t is the state *entering* element t.
+    """
+    leaves, treedef = jax.tree.flatten(xs)
+    u_leaves = _check_units(units, treedef)
+    L = leaves[0].shape[0]
+    feat_shapes = [l.shape[1:] for l in leaves]
+    fbls = [max(1, math.prod(fs)) for fs in feat_shapes]
+    block = max(1, min(block, L))
+    L_pad = -(-L // block) * block
+
+    def prep(l, u):
+        flat = l.reshape(L, -1)
+        if L_pad != L:   # identity padding: the tail only affects padded rows
+            flat = jnp.concatenate(
+                [flat, jnp.full((L_pad - L, flat.shape[1]), u, l.dtype)], 0)
+        return flat[None]                            # (1, L_pad, F)
+
+    leaves3 = [prep(l, u) for l, u in zip(leaves, u_leaves)]
+    if carry0 is None:
+        c0_leaves = [jnp.full((1, 1, f), u, l.dtype)
+                     for f, u, l in zip(fbls, u_leaves, leaves)]
+    else:
+        c0_flat, c0_def = jax.tree.flatten(carry0)
+        if c0_def != treedef:
+            raise ValueError(f"carry0 structure {c0_def} != {treedef}")
+        c0_leaves = [jnp.asarray(c).astype(l.dtype).reshape(1, 1, -1)
+                     for c, l in zip(c0_flat, leaves)]
+    outs = _tree_scan_call(leaves3, c0_leaves, fbls, feat_shapes, treedef,
+                           combine, units, inclusive, block, interpret, kind)
+    return treedef.unflatten(
+        [o[0, :L].reshape((L,) + fs) for o, fs in zip(outs, feat_shapes)])
+
+
+def batched_scan(xs: Any, *, combine: Callable[[Any, Any], Any], units: Any,
+                 carry0: Optional[Any] = None, inclusive: bool = True,
+                 block: int = 128, fblock: int = 2048,
+                 interpret: bool = True, kind: str = "tree_scan") -> Any:
+    """Elementwise-monoid scan over axis 1 of a pytree of (B, L, *feat)
+    arrays (identical shapes) in ONE launch.  Features are flattened and
+    tiled by ``fblock`` — legal exactly because an elementwise combine
+    never mixes feature columns — so VMEM holds (block, fblock) tiles
+    regardless of the feature extent.  ``carry0`` leaves are (B, *feat)."""
+    leaves, treedef = jax.tree.flatten(xs)
+    u_leaves = _check_units(units, treedef)
+    shape = leaves[0].shape
+    if any(l.shape != shape for l in leaves):
+        raise ValueError("batched_scan needs identically-shaped leaves; "
+                         "use tree_scan for matrix monoids")
+    B, L = shape[:2]
+    feat = shape[2:]
+    F = max(1, math.prod(feat))
+    block = max(1, min(block, L))
+    L_pad = -(-L // block) * block
+    fblock = max(1, min(fblock, F))
+    F_pad = -(-F // fblock) * fblock
+
+    def prep(l, u, with_L):
+        flat = l.reshape((B, -1, F))
+        n_l = L_pad - flat.shape[1] if with_L else 0
+        if n_l:
+            flat = jnp.concatenate(
+                [flat, jnp.full((B, n_l, F), u, l.dtype)], axis=1)
+        if F_pad != F:   # unit-fill is arbitrary here; columns never mix
+            flat = jnp.concatenate(
+                [flat, jnp.full((B, flat.shape[1], F_pad - F), u, l.dtype)],
+                axis=2)
+        return flat
+
+    leaves3 = [prep(l, u, True) for l, u in zip(leaves, u_leaves)]
+    if carry0 is None:
+        c0_leaves = [jnp.full((B, 1, F_pad), u, l.dtype)
+                     for u, l in zip(u_leaves, leaves)]
+    else:
+        c0_flat, c0_def = jax.tree.flatten(carry0)
+        if c0_def != treedef:
+            raise ValueError(f"carry0 structure {c0_def} != {treedef}")
+        c0_leaves = [prep(c.reshape(B, 1, F).astype(l.dtype), u, False)
+                     for c, u, l in zip(c0_flat, u_leaves, leaves)]
+    fbls = [fblock] * len(leaves)
+    feat_shapes = [None] * len(leaves)   # keep tiles flat: combine is
+    outs = _tree_scan_call(              # elementwise, shape-agnostic
+        leaves3, c0_leaves, fbls, feat_shapes, treedef, combine, units,
+        inclusive, block, interpret, kind)
+    return treedef.unflatten(
+        [o[:, :L, :F].reshape((B, L) + feat) for o in outs])
+
+
+__all__ = ["tile_scan", "tree_scan", "batched_scan", "histogram_offsets"]

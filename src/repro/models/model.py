@@ -45,12 +45,29 @@ class Model:
     cfg: ModelConfig
     moe_strategy: str = "einsum"
     max_decoder_positions: int = 0   # learned decoder positions (whisper)
+    # SSM recurrence backend for full-sequence paths: "lax" (associative
+    # scan / chunk loop — differentiable, the training default) or "pallas"
+    # (single-launch chunked scan, kernels/ssm_scan.py — the serving path).
+    scan_impl: str = "lax"
 
     def __post_init__(self):
+        if self.scan_impl not in ("lax", "pallas"):
+            raise ValueError(
+                f"scan_impl must be 'lax' or 'pallas', got {self.scan_impl!r}")
         self.prefix_specs, self.period_specs, self.repeats = \
             stage_layout(self.cfg)
         self.enc_spec = LayerSpec("attn", False, False, True) \
             if self.cfg.is_encdec else None
+
+    @property
+    def recurrent_only(self) -> bool:
+        """True when decode state is O(1) per layer (no attention KV grows
+        with the sequence) — serving then needs a constant page span per
+        request instead of prompt+max_new cache positions."""
+        specs = list(self.prefix_specs) + list(self.period_specs)
+        return (not self.cfg.is_encdec
+                and all(s.kind in ("mamba", "mlstm", "slstm")
+                        and not s.has_cross for s in specs))
 
     # ------------------------------------------------------------------ init
     def init(self, key) -> Params:
@@ -134,7 +151,8 @@ class Model:
                 x, a, pl = layer_apply(
                     cfg, spec, stage_lp[pos], x, positions, causal=causal,
                     kv_states=kv_states, collect_cache=collect_cache,
-                    moe_strategy=self.moe_strategy)
+                    moe_strategy=self.moe_strategy,
+                    scan_impl=self.scan_impl)
                 aux = aux + a
                 payloads.append(pl)
             x = constrain(x, sp_spec)
@@ -180,7 +198,8 @@ class Model:
         for spec, lp in zip(self.prefix_specs, params.get("prefix", [])):
             x, a, _ = layer_apply(cfg, spec, lp, x, positions,
                                   kv_states=kv_states,
-                                  moe_strategy=self.moe_strategy)
+                                  moe_strategy=self.moe_strategy,
+                                  scan_impl=self.scan_impl)
             aux_total += a
 
         x, aux, _ = self._stage_scan(params, x, positions,
@@ -252,7 +271,8 @@ class Model:
         for spec, lp in zip(self.prefix_specs, params.get("prefix", [])):
             x, _, pl = layer_apply(cfg, spec, lp, x, positions,
                                    kv_states=kv_states, collect_cache=True,
-                                   moe_strategy=self.moe_strategy)
+                                   moe_strategy=self.moe_strategy,
+                                   scan_impl=self.scan_impl)
             prefix_payloads.append(pl)
 
         x, _, stage_payloads = self._stage_scan(
@@ -318,7 +338,8 @@ class Model:
             for spec, lp, lc in zip(self.prefix_specs, params["prefix"],
                                     cache["prefix"]):
                 x, lc2 = layer_prefill_chunk(cfg, spec, lp, x, lc, pos0,
-                                             moe_strategy=self.moe_strategy)
+                                             moe_strategy=self.moe_strategy,
+                                             scan_impl=self.scan_impl)
                 new_prefix.append(lc2)
             new_cache["prefix"] = new_prefix
 
@@ -330,7 +351,8 @@ class Model:
             for pos, spec in enumerate(specs):
                 x, c2 = layer_prefill_chunk(
                     cfg, spec, stage_lp[pos], x, stage_cache[pos], pos0,
-                    moe_strategy=self.moe_strategy)
+                    moe_strategy=self.moe_strategy,
+                    scan_impl=self.scan_impl)
                 new_slices.append(c2)
             return x, new_slices
 

@@ -98,9 +98,13 @@ def mamba_init(key, cfg: ModelConfig) -> Params:
 
 
 def _mamba_inner(params: Params, cfg: ModelConfig, xc: jnp.ndarray,
-                 h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                 h0: jnp.ndarray, *, scan_impl: str = "lax"
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One chunk of the selective scan.  xc: (B,c,Di) post-conv activations,
-    h0: (B,Di,N) carry → (y (B,c,Di), h_final)."""
+    h0: (B,Di,N) carry → (y (B,c,Di), h_final).  ``scan_impl="pallas"``
+    routes the recurrence through the single-launch chunked scan
+    (kernels/ssm_scan.py); "lax" is the associative_scan reference and the
+    differentiable training path (interpret-mode Pallas has no VJP)."""
     n = cfg.ssm_state_dim
     dt_rank = max(1, cfg.d_model // 16)
     proj = jnp.einsum("bcd,de->bce", xc, params["x_proj"])
@@ -114,13 +118,14 @@ def _mamba_inner(params: Params, cfg: ModelConfig, xc: jnp.ndarray,
     dBx = (delta * xc.astype(F32))[..., None] * Bs.astype(F32)[:, :, None, :]
     dBx = _c(dBx, "dp", None, "model", None)
 
-    def combine(a, b):
-        a1, b1 = a
-        a2, b2 = b
-        return (a1 * a2, b2 + a2 * b1)
-
-    prefA, within = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
-    states = within + prefA * h0[:, None]                       # (B,c,Di,N)
+    if scan_impl == "pallas":
+        from ..kernels.ssm_scan import mamba_assoc_scan
+        states = mamba_assoc_scan(dA, dBx, h0)                  # (B,c,Di,N)
+    else:
+        from ..kernels.ssm_scan import affine_combine
+        prefA, within = jax.lax.associative_scan(affine_combine, (dA, dBx),
+                                                 axis=1)
+        states = within + prefA * h0[:, None]                   # (B,c,Di,N)
     states = _c(states, "dp", None, "model", None)
     y = jnp.einsum("bcdn,bcn->bcd", states, Cs.astype(F32))
     y = y + params["D"] * xc.astype(F32)
@@ -129,7 +134,8 @@ def _mamba_inner(params: Params, cfg: ModelConfig, xc: jnp.ndarray,
 
 def mamba_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
                   h0: Optional[jnp.ndarray] = None,
-                  conv_buf: Optional[jnp.ndarray] = None
+                  conv_buf: Optional[jnp.ndarray] = None,
+                  scan_impl: str = "lax"
                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """x: (B,S,D) → (y (B,S,D), state {ssm, conv})."""
     B, S, D = x.shape
@@ -153,13 +159,13 @@ def mamba_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
         xs = xc.reshape(B, S // chunk, chunk, di).transpose(1, 0, 2, 3)
 
         def body(h, xck):
-            y, h2 = _mamba_inner(params, cfg, xck, h)
+            y, h2 = _mamba_inner(params, cfg, xck, h, scan_impl=scan_impl)
             return h2, y
 
         hF, ys = jax.lax.scan(body, h0, xs)
         y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
     else:
-        y, hF = _mamba_inner(params, cfg, xc, h0)
+        y, hF = _mamba_inner(params, cfg, xc, h0, scan_impl=scan_impl)
 
     y = y * jax.nn.silu(z)
     out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
@@ -236,12 +242,12 @@ def _headwise_rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, nheads: int,
     return (xh.reshape(B, S, di) * scale.astype(F32)).astype(x.dtype)
 
 
-def _mlstm_chunk(q, k, v, log_i, log_f, carry):
-    """One stabilized chunk.
+def _mlstm_intra(q, k, v, log_i, log_f, carry):
+    """Chunk outputs given the state ENTERING the chunk.
 
     q,k,v: (B,c,H,dh); log_i/log_f: (B,c,H) fp32.
     carry = (C (B,H,dh,dh), n (B,H,dh), m (B,H)) fp32.
-    Returns (h (B,c,H,dh), new carry).
+    Returns (h (B,c,H,dh), F (B,c,H) inclusive gate cumsum, F_tot (B,H)).
     """
     B, c, H, dh = q.shape
     Chat, nhat, m_prev = carry
@@ -280,6 +286,19 @@ def _mlstm_chunk(q, k, v, log_i, log_f, carry):
     num = num_intra + num_inter
     den = den_intra + den_inter
     h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+    return h, F, F_tot
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, carry):
+    """One stabilized chunk: intra outputs + sequential carry update.
+
+    Returns (h (B,c,H,dh), new carry).  The carry update is exactly one
+    application of the ``logspace_affine_combine`` monoid
+    (kernels/ssm_scan.py) to the chunk's summary — the identity the
+    Pallas chunk-parallel path in :func:`mlstm_forward` rests on.
+    """
+    Chat, nhat, m_prev = carry
+    h, F, F_tot = _mlstm_intra(q, k, v, log_i, log_f, carry)
 
     # carry update
     decay_k = F_tot[:, None, :] - F + log_i          # (B,c,H): gate j→end
@@ -293,8 +312,30 @@ def _mlstm_chunk(q, k, v, log_i, log_f, carry):
     return h, (C_new, n_new, m_next)
 
 
+def _mlstm_chunk_summary(k, v, log_i, log_f):
+    """The chunk's element of the log-space affine monoid.
+
+    k,v: (B,c,H,dh); log_i/log_f: (B,c,H) fp32 → (la, m_loc, Ĉ, n̂):
+    the whole chunk acts on the entering state as
+    ``(C, n) ↦ exp(la)·(C, n) + exp(m_loc)·(Ĉ, n̂)`` with
+    ``la = ΣF`` (total log forget) and ``(Ĉ, n̂)`` the chunk's own
+    key-value outer products at scale ``exp(m_loc)``.  Independent of the
+    carry, so every chunk computes its summary in parallel.
+    """
+    F = jnp.cumsum(log_f, axis=1)                    # (B,c,H)
+    F_tot = F[:, -1]                                 # (B,H)
+    decay_k = F_tot[:, None, :] - F + log_i          # (B,c,H)
+    m_loc = jnp.maximum(jnp.max(decay_k, axis=1), -1e30)
+    gain = jnp.exp(decay_k - m_loc[:, None, :])
+    Chat = jnp.einsum("bjh,bjhd,bjhe->bhde", gain, k.astype(F32),
+                      v.astype(F32))
+    nhat = jnp.einsum("bjh,bjhd->bhd", gain, k.astype(F32))
+    return F_tot, m_loc, Chat, nhat
+
+
 def mlstm_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
-                  state: Optional[Dict[str, jnp.ndarray]] = None
+                  state: Optional[Dict[str, jnp.ndarray]] = None,
+                  scan_impl: str = "lax"
                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     B, S, D = x.shape
     di = cfg.ssm_expand * D
@@ -341,12 +382,33 @@ def mlstm_forward(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
         qs, ks_, vs = rs(q, (H, dh)), rs(k, (H, dh)), rs(v, (H, dh))
         lis, lfs = rs(log_i, (H,)), rs(log_f, (H,))
 
-        def body(c, xs):
-            qc, kc, vc, lic, lfc = xs
-            h, c2 = _mlstm_chunk(qc, kc, vc, lic, lfc, c)
-            return c2, h
+        if scan_impl == "pallas":
+            # chunk-parallel form: (1) every chunk's monoid summary in
+            # parallel, (2) ONE pallas launch scans the carries entering
+            # each chunk, (3) every chunk's outputs in parallel against
+            # its entering carry.  The sequential lax.scan below applies
+            # the same combine chunk-by-chunk, so the two paths agree to
+            # fp32 reassociation error (pinned in tests/test_ssm_scan.py).
+            from ..kernels.ssm_scan import (logspace_affine_combine,
+                                            mlstm_carry_scan)
+            C0, n0, m0 = carry
+            la, mS, CS, nS = jax.vmap(_mlstm_chunk_summary)(
+                ks_, vs, lis, lfs)
+            la_e, m_e, C_e, n_e = mlstm_carry_scan(
+                la, mS, CS, nS, (m0, C0, n0))
+            hs, _, _ = jax.vmap(_mlstm_intra)(
+                qs, ks_, vs, lis, lfs, (C_e, n_e, m_e))
+            _, mF, CF, nF = logspace_affine_combine(
+                (la_e[-1], m_e[-1], C_e[-1], n_e[-1]),
+                (la[-1], mS[-1], CS[-1], nS[-1]))
+            carry = (CF, nF, mF)
+        else:
+            def body(c, xs):
+                qc, kc, vc, lic, lfc = xs
+                h, c2 = _mlstm_chunk(qc, kc, vc, lic, lfc, c)
+                return c2, h
 
-        carry, hs = jax.lax.scan(body, carry, (qs, ks_, vs, lis, lfs))
+            carry, hs = jax.lax.scan(body, carry, (qs, ks_, vs, lis, lfs))
         h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
     else:
         h, carry = _mlstm_chunk(q, k, v, log_i, log_f, carry)

@@ -140,7 +140,8 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, lp: Params, x: jnp.ndarray,
                 positions: jnp.ndarray, *, causal: bool = True,
                 kv_states: Optional[jnp.ndarray] = None,
                 collect_cache: bool = False,
-                moe_strategy: str = "einsum"
+                moe_strategy: str = "einsum",
+                scan_impl: str = "lax"
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
     """Returns (x, aux_loss, cache_payload-or-None)."""
     from ..dist.sharding import constrain, dp
@@ -163,11 +164,11 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, lp: Params, x: jnp.ndarray,
             latent = mla_cache_payload(lp["mixer"], cfg, h, positions)
             payload = {"latent": constrain(latent, P(dp(), "model", None))}
     elif spec.kind == "mamba":
-        mix, st = mamba_forward(lp["mixer"], cfg, h)
+        mix, st = mamba_forward(lp["mixer"], cfg, h, scan_impl=scan_impl)
         if collect_cache:
             payload = st
     elif spec.kind == "mlstm":
-        mix, st = mlstm_forward(lp["mixer"], cfg, h)
+        mix, st = mlstm_forward(lp["mixer"], cfg, h, scan_impl=scan_impl)
         if collect_cache:
             payload = st
     elif spec.kind == "slstm":
@@ -276,7 +277,8 @@ def layer_decode(cfg: ModelConfig, spec: LayerSpec, lp: Params,
 
 def layer_prefill_chunk(cfg: ModelConfig, spec: LayerSpec, lp: Params,
                         x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
-                        pos0, *, moe_strategy: str = "einsum"
+                        pos0, *, moe_strategy: str = "einsum",
+                        scan_impl: str = "lax"
                         ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Process chunk positions [pos0, pos0+c) against cached history.
 
@@ -320,11 +322,12 @@ def layer_prefill_chunk(cfg: ModelConfig, spec: LayerSpec, lp: Params,
     elif spec.kind == "mamba":
         from .ssm import mamba_forward as _mf
         y, st = _mf(lp["mixer"], cfg, h, h0=cache["ssm"],
-                    conv_buf=cache["conv"])
+                    conv_buf=cache["conv"], scan_impl=scan_impl)
         new_cache.update(st)
     elif spec.kind == "mlstm":
         from .ssm import mlstm_forward
-        y, st = mlstm_forward(lp["mixer"], cfg, h, state=cache)
+        y, st = mlstm_forward(lp["mixer"], cfg, h, state=cache,
+                              scan_impl=scan_impl)
         new_cache.update({k2: st[k2] for k2 in ("C", "n", "m", "conv")})
     elif spec.kind == "slstm":
         from .ssm import slstm_forward

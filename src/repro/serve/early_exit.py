@@ -33,6 +33,7 @@ class DecodeStats:
     useful_tokens: int = 0        # tokens up to & including EOS
     wasted_tokens: int = 0        # tokens decoded past EOS
     all_finished: bool = False
+    early_exit: bool = False      # retired by the entropy gate, not EOS
 
     @property
     def wasted_fraction(self) -> float:
@@ -118,6 +119,74 @@ def make_decode_tick(model: Model, eos_id: int):
     return dispatch
 
 
+def make_gated_decode_tick(model: Model, eos_id: int, *, tau: float,
+                           patience: int = 2):
+    """Uncertainty-gated decode tick: EOS retirement plus an entropy gate.
+
+    A lane whose predictive entropy stays below ``tau`` nats for
+    ``patience`` consecutive live steps is *confident* — the model has
+    committed to a low-uncertainty continuation — and retires early, so
+    its decode lane (and its state slot) backfills from the queue.  The
+    per-slot ``streak`` counter is threaded through the tick alongside the
+    other slot state; ``gated`` reports which lanes the gate (not EOS /
+    budget) retired this tick.
+
+    Exactness property: gating only *stops* emission — every token emitted
+    before the gate fires is the same greedy token the ungated tick
+    produces, so a gated stream is an exact prefix of the ungated stream
+    (pinned in tests/test_ssm_scan.py and BENCH_scan_ssm.json).
+
+    Returns fn(params, tokens, cache, lengths, finished, remaining, streak,
+    n) → (tokens, cache, lengths, finished, remaining, streak, gated,
+    out (B, n), wasted (B,)).
+    """
+
+    def tick(params, tokens, cache, lengths, finished, remaining, streak,
+             *, n: int):
+        B = tokens.shape[0]
+        V = model.cfg.vocab_size
+
+        def body(i, carry):
+            (tokens, cache, lengths, finished, remaining, streak, gated,
+             out, wasted) = carry
+            live = ~finished
+            logits, cache = model.decode_step(params, tokens, cache, lengths)
+            lg = logits[:, :V]
+            p = jax.nn.softmax(lg, axis=-1)
+            ent = -jnp.sum(p * jnp.log(p + 1e-9), axis=-1)    # (B,) nats
+            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            wasted = wasted + finished.astype(jnp.int32)
+            out = out.at[:, i].set(jnp.where(finished, -1, nxt))
+            remaining = remaining - live.astype(jnp.int32)
+            streak = jnp.where(live & (ent < tau), streak + 1, 0)
+            gate = live & (streak >= patience)
+            finished = finished | (nxt == eos_id) | (remaining <= 0) | gate
+            gated = gated | gate
+            lengths = lengths + live.astype(jnp.int32)
+            tokens = jnp.where(live, nxt, tokens)
+            return (tokens, cache, lengths, finished, remaining, streak,
+                    gated, out, wasted)
+
+        out0 = jnp.full((B, n), -1, jnp.int32)
+        wasted0 = jnp.zeros((B,), jnp.int32)
+        gated0 = jnp.zeros((B,), bool)
+        return jax.lax.fori_loop(
+            0, n, body,
+            (tokens, cache, lengths, finished, remaining, streak, gated0,
+             out0, wasted0))
+
+    jits: Dict[int, Callable] = {}
+
+    def dispatch(params, tokens, cache, lengths, finished, remaining,
+                 streak, n: int):
+        if n not in jits:
+            jits[n] = jax.jit(partial(tick, n=n), donate_argnums=2)
+        return jits[n](params, tokens, cache, lengths, finished, remaining,
+                       streak)
+
+    return dispatch
+
+
 def decode_until_eos(model: Model, params: Any, first_tokens: jnp.ndarray,
                      cache: Any, lengths: jnp.ndarray, *, eos_id: int,
                      max_new: int = 256, use_blocks: bool = True,
@@ -167,4 +236,5 @@ def decode_until_eos(model: Model, params: Any, first_tokens: jnp.ndarray,
     return gen, cache, stats
 
 
-__all__ = ["decode_until_eos", "make_decode_block", "DecodeStats"]
+__all__ = ["decode_until_eos", "make_decode_block", "make_decode_tick",
+           "make_gated_decode_tick", "DecodeStats"]

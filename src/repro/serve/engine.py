@@ -36,7 +36,7 @@ from ..core import (Cap, CostModel, Runtime, StaticPartitionPolicy,
                     WorkRange, cap)
 from ..models.model import Model
 from .early_exit import (DecodeStats, decode_until_eos, make_decode_block,
-                         make_decode_tick)
+                         make_decode_tick, make_gated_decode_tick)
 from .kvcache import PageTable, cache_slot_insert
 from .prefill import ChunkedPrefill
 from .slo import SLO_CLASSES, FifoServePolicy, ServePolicy
@@ -120,6 +120,12 @@ class EngineConfig:
     # per-SLO-class concurrency caps, e.g. {"batch": 2} (absent = uncapped)
     max_queue: Optional[int] = None
     class_caps: Optional[Dict[str, int]] = None
+    # uncertainty-gated early exit (continuous engine): a lane whose
+    # predictive entropy stays below ``exit_entropy`` nats for
+    # ``exit_patience`` consecutive steps retires early and its slot
+    # backfills.  None disables gating (the exact decode tick).
+    exit_entropy: Optional[float] = None
+    exit_patience: int = 2
 
     def __post_init__(self) -> None:
         if self.max_batch < 1:
@@ -145,6 +151,12 @@ class EngineConfig:
                                  f"expected one of {SLO_CLASSES}")
             if n < 1:
                 raise ValueError(f"class_caps[{c!r}] must be >= 1, got {n}")
+        if self.exit_entropy is not None and self.exit_entropy <= 0:
+            raise ValueError(
+                f"exit_entropy must be > 0 nats, got {self.exit_entropy}")
+        if self.exit_patience < 1:
+            raise ValueError(
+                f"exit_patience must be >= 1, got {self.exit_patience}")
 
 
 @dataclasses.dataclass
@@ -173,6 +185,7 @@ class EngineTelemetry:
     class_preemptions: int = 0    # batch prefill parked for interactive work
     policy_swaps: int = 0         # live set_policy() calls
     slot_deaths: int = 0          # decode lanes killed (chaos) and requeued
+    early_exits: int = 0          # lanes retired by the entropy gate
     ewma: float = 0.25
     # EWMA fields already seeded by a first observation.  A plain
     # ``old == 0.0`` sentinel misreads a genuine ~0.0 first sample and,
@@ -241,6 +254,7 @@ class EngineTelemetry:
             "class_preemptions": self.class_preemptions,
             "policy_swaps": self.policy_swaps,
             "slot_deaths": self.slot_deaths,
+            "early_exits": self.early_exits,
         }
 
 
@@ -389,6 +403,7 @@ class _Slot:
     eos_hit: bool = False
     steps: int = 0                # decode steps run while occupied
     wasted: int = 0               # post-finish steps inside ticks
+    early_exit: bool = False      # retired by the entropy gate
 
 
 @dataclasses.dataclass
@@ -448,10 +463,19 @@ class ContinuousEngine:
         self.tokens = jnp.zeros((B,), jnp.int32)
         self.finished = jnp.ones((B,), bool)      # empty lanes are finished
         self.remaining = jnp.zeros((B,), jnp.int32)
+        self.streak = jnp.zeros((B,), jnp.int32)  # entropy-gate streaks
         self.slots: List[Optional[_Slot]] = [None] * B
         self._job: Optional[_PrefillJob] = None
         self._parked: Optional[_PrefillJob] = None   # class-preempted prefill
-        self._tick = make_decode_tick(model, cfg.eos_id)
+        # recurrence-only models hold O(1) decode state per request — pages
+        # become fixed-size *state slots* instead of seq-length KV spans
+        self._state_slots = model.recurrent_only
+        if cfg.exit_entropy is not None:
+            self._tick = make_gated_decode_tick(
+                model, cfg.eos_id, tau=cfg.exit_entropy,
+                patience=cfg.exit_patience)
+        else:
+            self._tick = make_decode_tick(model, cfg.eos_id)
         self._policy: ServePolicy = policy or FifoServePolicy()
         self.preempted = False    # SIGTERM drain flag
 
@@ -472,7 +496,15 @@ class ContinuousEngine:
     # ---------------------------------------------------------------- admit
     def _slot_span(self, req: Request) -> int:
         """Worst-case cache positions the request can touch: the padded
-        prefill width or true length + budget, whichever is larger."""
+        prefill width or true length + budget, whichever is larger.
+
+        Recurrence-only models (pure Mamba/xLSTM stacks) are the exception:
+        their decode state is O(1) — a conv tail plus a fixed-size carry —
+        so a request's footprint is one page regardless of prompt length or
+        budget.  That is the SSM *state slot*: page accounting never defers
+        an admission for sequence length, only for lane exhaustion."""
+        if self._state_slots:
+            return self.cfg.page_size
         pad = max(32, -(-len(req.prompt) // 32) * 32)
         return max(pad, len(req.prompt) + req.max_new)
 
@@ -656,6 +688,7 @@ class ContinuousEngine:
         self.tokens = self.tokens.at[slot].set(first)
         self.finished = self.finished.at[slot].set(done)
         self.remaining = self.remaining.at[slot].set(req.max_new - 1)
+        self.streak = self.streak.at[slot].set(0)
         self.slots[slot] = _Slot(req=req, first=first, lease=job.lease,
                                  class_lease=job.class_lease,
                                  eos_hit=(first == self.cfg.eos_id))
@@ -671,10 +704,18 @@ class ContinuousEngine:
             return
         n = self.cfg.decode_tick
         t0 = time.perf_counter()
-        (self.tokens, self.cache, self.lengths, self.finished,
-         self.remaining, out, wasted) = self._tick(
-            self.params, self.tokens, self.cache, self.lengths,
-            self.finished, self.remaining, n)
+        if self.cfg.exit_entropy is not None:
+            (self.tokens, self.cache, self.lengths, self.finished,
+             self.remaining, self.streak, gated, out, wasted) = self._tick(
+                self.params, self.tokens, self.cache, self.lengths,
+                self.finished, self.remaining, self.streak, n)
+            gated_np = np.asarray(gated)
+        else:
+            (self.tokens, self.cache, self.lengths, self.finished,
+             self.remaining, out, wasted) = self._tick(
+                self.params, self.tokens, self.cache, self.lengths,
+                self.finished, self.remaining, n)
+            gated_np = None
         out_np = np.asarray(out)          # blocks until the tick is done
         self.telemetry.observe_decode(int((out_np >= 0).sum()),
                                       time.perf_counter() - t0, n)
@@ -687,6 +728,8 @@ class ContinuousEngine:
             s.wasted += int(wasted_np[i])
             if (valid == self.cfg.eos_id).any():
                 s.eos_hit = True
+            if gated_np is not None and bool(gated_np[i]):
+                s.early_exit = True
 
     # --------------------------------------------------------------- retire
     def _retire(self) -> List[Request]:
@@ -704,7 +747,10 @@ class ContinuousEngine:
                 steps_run=s.steps,
                 useful_tokens=len(r.result),
                 wasted_tokens=s.steps - (len(r.result) - 1),
-                all_finished=s.eos_hit)
+                all_finished=s.eos_hit,
+                early_exit=s.early_exit)
+            if s.early_exit:
+                self.telemetry.early_exits += 1
             r.t_done = now
             self.pages.release(r.rid)
             s.lease.on_finish()
@@ -736,6 +782,7 @@ class ContinuousEngine:
         self.finished = self.finished.at[i].set(True)
         self.remaining = self.remaining.at[i].set(0)
         self.lengths = self.lengths.at[i].set(0)
+        self.streak = self.streak.at[i].set(0)
         r.requeues += 1
         r.t_first = None
         self.queue.insert(0, r)
